@@ -1,0 +1,46 @@
+"""Fig. 6 — off-chip streaming ablation: baseline / activations-only /
+weights-only / both, on UNet and UNet3D.
+
+Paper: both mechanisms together give up to 1.3x (UNet) and 1.1x (UNet3D);
+gains are larger at small batch sizes.  Metric: GMACs/s = model MACs x fps.
+"""
+from __future__ import annotations
+
+from repro.core import DSEConfig, ZCU102, build_unet, build_unet3d, run_dse
+
+from .common import emit, timeit
+
+STRATEGIES = {
+    "baseline": dict(allow_eviction=False, allow_fragmentation=False),
+    "act_only": dict(allow_eviction=True, allow_fragmentation=False),
+    "wgt_only": dict(allow_eviction=False, allow_fragmentation=True),
+    "both": dict(allow_eviction=True, allow_fragmentation=True),
+}
+
+
+def run(batch: int = 1) -> dict:
+    out = {}
+    for model_name, build in (("unet", build_unet), ("unet3d", build_unet3d)):
+        for strat, flags in STRATEGIES.items():
+            g = build()
+            res = None
+
+            def go():
+                nonlocal res
+                res = run_dse(g, ZCU102, DSEConfig(
+                    batch=batch, cut_kinds=("conv", "pool"), word_bits=8,
+                    codecs=("none",), **flags))
+
+            us = timeit(go, repeats=1, warmup=0)
+            gmacs = g.total_macs() / 1e9 * res.throughput_fps
+            out[(model_name, strat)] = gmacs
+            emit(f"fig6/{model_name}_{strat}_b{batch}", us,
+                 f"gmacs_per_s={gmacs:.1f} fps={res.throughput_fps:.2f} "
+                 f"parts={res.partitioning.n} "
+                 f"evicted={sum(1 for e in res.partitioning.graph.edges() if e.evicted)} "
+                 f"fragged={sum(1 for v in res.partitioning.graph.vertices() if v.frag_ratio > 0)}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

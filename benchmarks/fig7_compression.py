@@ -1,0 +1,45 @@
+"""Fig. 7 — off-chip streaming compression schemes (none / Huffman / RLE).
+
+Paper: RLE is the best choice for UNet (up to 2.21x MACs/s vs no encoding);
+UNet3D sees no gain because the design becomes LUT-bound and Huffman's
+decoder overhead actually hurts.  The LUT costs per codec are modelled in
+core/compression.CODEC_LUT_COST.
+"""
+from __future__ import annotations
+
+from repro.core import DSEConfig, ZCU102, build_unet, build_unet3d, run_dse
+
+from .common import emit, timeit
+
+SCHEMES = {"none": ("none",), "huffman": ("none", "huffman"),
+           "rle": ("none", "rle")}
+
+
+def run(batch: int = 1) -> dict:
+    out = {}
+    for model_name, build in (("unet", build_unet), ("unet3d", build_unet3d)):
+        for scheme, codecs in SCHEMES.items():
+            g = build()
+            res = None
+
+            def go():
+                nonlocal res
+                res = run_dse(g, ZCU102, DSEConfig(
+                    batch=batch, cut_kinds=("conv", "pool"), word_bits=8,
+                    codecs=codecs))
+
+            us = timeit(go, repeats=1, warmup=0)
+            gmacs = g.total_macs() / 1e9 * res.throughput_fps
+            out[(model_name, scheme)] = gmacs
+            used = {e.codec for e in res.partitioning.graph.edges()
+                    if e.evicted}
+            used |= {v.meta.get("frag_codec") for v in
+                     res.partitioning.graph.vertices() if v.frag_ratio > 0}
+            emit(f"fig7/{model_name}_{scheme}_b{batch}", us,
+                 f"gmacs_per_s={gmacs:.1f} fps={res.throughput_fps:.2f} "
+                 f"codecs_used={sorted(c for c in used if c and c != 'none')}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,138 @@
+"""§Roofline — three-term roofline per (arch x shape x mesh) from the
+compiled dry-run artifacts.
+
+  compute    = HLO_dot_FLOPs_per_device / peak_FLOPs          [s]
+  memory     = HBM_traffic_per_device   / HBM_bw              [s]
+  collective = collective_operand_bytes_per_device / link_bw  [s]
+
+FLOPs and collective bytes come from the trip-count-aware HLO analysis
+(launch/hlo_analysis.py) — XLA's cost_analysis counts while bodies once, so
+scan-over-layers models would otherwise be understated by ~n_layers.
+HBM traffic uses the dot-operand/result proxy (weights + activations of
+every matmul, trip-aware) plus the argument residents once per step.
+
+MODEL_FLOPS: 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode, per token),
+with N = active params for MoE.  The MODEL/HLO ratio flags remat and
+dispatch overheads.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.resources import (HBM_GBPS, ICI_GBPS_PER_LINK,
+                                  PEAK_FLOPS_BF16)
+
+from .common import emit
+
+PEAK = PEAK_FLOPS_BF16
+HBM_BPS = HBM_GBPS / 8 * 1e9
+ICI_BPS = ICI_GBPS_PER_LINK / 8 * 1e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global analytic step FLOPs (6ND / 2ND + attention)."""
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape_name]
+    n = cfg.param_counts()["active"]
+    B, S = sh.global_batch, sh.seq_len
+    if sh.kind == "train":
+        tok = B * S
+        base = 6 * n * tok
+        attn = 12 * B * S * S * cfg.n_heads * cfg.hd * _attn_layers(cfg) / 2
+    elif sh.kind == "prefill":
+        tok = B * S
+        base = 2 * n * tok
+        attn = 4 * B * S * S * cfg.n_heads * cfg.hd * _attn_layers(cfg) / 2
+    else:                                      # decode: one token vs cache S
+        tok = B
+        base = 2 * n * tok
+        attn = 4 * B * S * cfg.n_heads * cfg.hd * _attn_layers(cfg)
+    return base + attn
+
+
+def _attn_layers(cfg) -> int:
+    return sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "attn")
+
+
+def cell_terms(rec: dict) -> dict | None:
+    if "memory" not in rec:
+        return None
+    chips = rec["n_devices"]
+    ta = rec.get("trip_aware", {})
+    flops_dev = ta.get("flops_dot", 0.0)
+    coll_dev = ta.get("collectives", {}).get("total_bytes", 0.0)
+    # HBM traffic: trip-aware dot bytes + one pass over resident arguments
+    hbm_dev = ta.get("dot_bytes", 0.0) + rec["memory"].get(
+        "argument_size_in_bytes", 0)
+    t_compute = flops_dev / PEAK
+    t_memory = hbm_dev / HBM_BPS
+    t_coll = coll_dev / ICI_BPS
+    mf = model_flops(rec["arch"], rec["shape"])
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll,
+             "model_flops": mf, "hlo_flops_global": flops_dev * chips,
+             "useful_ratio": mf / max(flops_dev * chips, 1.0),
+             "bound": max(
+                 (("compute", t_compute), ("memory", t_memory),
+                  ("collective", t_coll)), key=lambda kv: kv[1])[0]}
+    dom = max(t_compute, t_memory, t_coll)
+    terms["roofline_fraction"] = t_compute / dom if dom > 0 else 0.0
+    terms["step_lower_bound_s"] = dom
+    return terms
+
+
+def load(results_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for f in sorted(pathlib.Path(results_dir).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def run(results_dir: str = "results/dryrun",
+        out_md: str = "results/roofline.md") -> list[dict]:
+    rows = []
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+             "bound | MODEL/HLO | roofline_frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load(results_dir):
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if "skipped" in rec:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                         f"| — | — | — | skipped | — | — |")
+            continue
+        t = cell_terms(rec)
+        if t is None:
+            continue
+        rows.append({**rec, **t})
+        emit(f"roofline/{tag}", 0.0,
+             f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+             f"coll={t['collective_s']:.4f}s bound={t['bound']} "
+             f"useful={t['useful_ratio']:.2f} "
+             f"frac={t['roofline_fraction']:.2f}")
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['bound']} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.2f} |")
+    out = pathlib.Path(out_md)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text("\n".join(lines) + "\n")
+    # optimised (§Perf) runs, when present, reported next to the baseline
+    opt_dir = pathlib.Path("results/dryrun_opt")
+    if results_dir == "results/dryrun" and opt_dir.exists():
+        for rec in load(str(opt_dir)):
+            t = cell_terms(rec)
+            if t is None:
+                continue
+            tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+            emit(f"roofline_opt/{tag}", 0.0,
+                 f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+                 f"coll={t['collective_s']:.4f}s bound={t['bound']} "
+                 f"useful={t['useful_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  The roofline section reads
+the dry-run artifacts in results/dryrun (run launch/dryrun.py first; the
+checked-in results are used if present).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (fig6_ablation, fig7_compression, fig8_variability,
+                   kernels_bench, roofline, table3_models,
+                   table4_partitioning, table5_throughput)
+    print("name,us_per_call,derived")
+    table3_models.run()
+    table4_partitioning.run()
+    fig6_ablation.run()
+    fig7_compression.run()
+    fig8_variability.run()
+    table5_throughput.run()
+    kernels_bench.run()
+    try:
+        roofline.run()
+    except FileNotFoundError:
+        print("roofline,0,skipped (run `python -m repro.launch.dryrun --all` first)",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Table III — characteristics of the evaluated CNN models.
+
+Validates our graph reconstructions (core/builders.py) against the paper's
+MAC / parameter / conv-layer counts.
+"""
+from __future__ import annotations
+
+from repro.core import PAPER_MODELS, TABLE3
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    for name, build in PAPER_MODELS.items():
+        us = timeit(lambda b=build: b(), repeats=1)
+        g = build()
+        macs = g.total_macs() / 1e9
+        params = g.total_weight_words() / 1e6
+        convs = sum(1 for v in g.vertices()
+                    if v.kind in ("conv", "dwconv", "deconv"))
+        ref = TABLE3[name]
+        emit(f"table3/{name}", us,
+             f"macs={macs:.2f}G ref={ref['macs_g']}G "
+             f"dev={100 * (macs / ref['macs_g'] - 1):+.1f}% "
+             f"params={params:.2f}M ref={ref['params_m']}M "
+             f"convs={convs} ref={ref['convs']}")
+
+
+if __name__ == "__main__":
+    run()

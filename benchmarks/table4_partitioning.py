@@ -1,0 +1,43 @@
+"""Table IV — model partitioning + device reconfiguration vs batch size.
+
+Paper result (UNet3D): larger batches amortise the reconfiguration time
+(31.2% of batch latency at b=1 down to 1.1% at b=64).  We reproduce the
+trend with the DSE on a constrained device.
+"""
+from __future__ import annotations
+
+from repro.core import DSEConfig, ZCU102, build_unet3d, run_dse
+from repro.core.partition import subgraph_cost
+
+from .common import emit, timeit
+
+PAPER = {1: (4, 31.16), 4: (5, 11.95), 16: (6, 4.29), 64: (6, 1.11)}
+
+
+def run() -> None:
+    for batch, (ref_parts, ref_pct) in PAPER.items():
+        g = build_unet3d()
+        res = None
+
+        def go():
+            nonlocal res
+            res = run_dse(g, ZCU102, DSEConfig(
+                batch=batch, cut_kinds=("conv", "pool"), word_bits=8))
+
+        us = timeit(go, repeats=1, warmup=0)
+        n = res.partitioning.n
+        f = ZCU102.cycles_per_s
+        compute_s = sum(
+            (batch * subgraph_cost(res.partitioning, i).ii_cycles
+             + subgraph_cost(res.partitioning, i).depth_cycles) / f
+            for i in range(n))
+        reconf_s = n * ZCU102.reconfig_s if n > 1 else 0.0
+        total = compute_s + reconf_s
+        pct = 100 * reconf_s / total if total else 0.0
+        emit(f"table4/unet3d_b{batch}", us,
+             f"parts={n} ref={ref_parts} reconf_pct={pct:.1f} "
+             f"ref_pct={ref_pct} latency_s={total:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Table V — accelerator comparison: SMOF designs across the four paper
+workloads + their devices, vs the paper's reported numbers.
+
+Columns reproduced: fps, GOP/s, GOP/s/DSP (the paper's device-agnostic
+metric).  We report our DSE's estimates next to the paper's design points.
+"""
+from __future__ import annotations
+
+from repro.core import (DSEConfig, PAPER_MODELS, U200, VCU118, VCU1525,
+                        ZCU102, run_dse)
+
+from .common import emit, timeit
+
+# (model, device, batch) -> paper (fps, gops, gops_per_dsp)
+PAPER_POINTS = {
+    ("unet", U200, 1): (21.21, 2758, 0.45),
+    ("unet", VCU1525, 1): (16.96, 2206, 0.36),
+    ("yolov8n", VCU118, 16): (184.27, 808, 0.16),
+    ("x3d_m", ZCU102, 16): (27.08, 171, 0.18),
+    ("unet3d", U200, 4): (1.75, 1595, 0.28),
+}
+
+
+def run() -> dict:
+    out = {}
+    for (model, dev, batch), (ref_fps, ref_gops, ref_gpd) in \
+            PAPER_POINTS.items():
+        g = PAPER_MODELS[model]()
+        res = None
+
+        def go():
+            nonlocal res
+            res = run_dse(g, dev, DSEConfig(
+                batch=batch, cut_kinds=("conv", "pool"), word_bits=8,
+                codecs=("none", "rle")))
+
+        us = timeit(go, repeats=1, warmup=0)
+        fps = res.throughput_fps
+        gops = 2 * g.total_macs() / 1e9 * fps
+        gpd = gops / (dev.compute_units / 2)       # DSPs (packing=2)
+        out[(model, dev.name)] = (fps, gops, gpd)
+        emit(f"table5/{model}_{dev.name}_b{batch}", us,
+             f"fps={fps:.2f} ref={ref_fps} gops={gops:.0f} ref={ref_gops} "
+             f"gops_per_dsp={gpd:.2f} ref={ref_gpd} "
+             f"parts={res.partitioning.n}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

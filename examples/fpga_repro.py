@@ -1,0 +1,30 @@
+"""Paper-faithful reproduction run: Tables III-V + Figs 6-8 in one shot.
+
+    PYTHONPATH=src python examples/fpga_repro.py
+"""
+import sys
+
+sys.path.insert(0, ".")  # allow running from repo root
+
+from benchmarks import (fig6_ablation, fig7_compression, fig8_variability,
+                        table3_models, table4_partitioning, table5_throughput)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    print("# --- Table III: model characteristics ---")
+    table3_models.run()
+    print("# --- Table IV: partitioning vs batch (UNet3D) ---")
+    table4_partitioning.run()
+    print("# --- Fig 6: off-chip streaming ablation ---")
+    fig6_ablation.run()
+    print("# --- Fig 7: compression schemes ---")
+    fig7_compression.run()
+    print("# --- Fig 8: compression-ratio variability ---")
+    fig8_variability.run()
+    print("# --- Table V: cross-work comparison points ---")
+    table5_throughput.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: run the SMOF DSE on the paper's UNet and print the design.
+
+    PYTHONPATH=src python examples/quickstart.py [--device u200] [--batch 1]
+
+Reproduces the paper's Fig. 4 design point (UNet on U200: ~21 fps, single
+partition, weights mostly on-chip) and shows the decision vector the DSE
+produced — which edges were evicted, which layers fragmented.
+"""
+import argparse
+
+from repro.core import (DSEConfig, build_unet, get_device, plan_from_dse,
+                        run_dse)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device", default="u200")
+    ap.add_argument("--batch", type=int, default=1)
+    args = ap.parse_args()
+
+    dev = get_device(args.device)
+    g = build_unet()
+    print(f"UNet: {g.total_macs() / 1e9:.1f} GMACs, "
+          f"{g.total_weight_words() / 1e6:.1f} M params, "
+          f"{g.g.number_of_nodes()} vertices")
+    res = run_dse(g, dev, DSEConfig(batch=args.batch,
+                                    cut_kinds=("conv", "pool"),
+                                    codecs=("none", "rle"), word_bits=8))
+    s = res.summary()
+    print(f"\nDSE result on {dev.name} (paper Fig. 4: 21 fps / 47 ms):")
+    print(f"  throughput : {s['throughput_fps']:.2f} fps")
+    print(f"  latency    : {s['latency_s'] * 1e3:.1f} ms")
+    print(f"  partitions : {s['n_partitions']}")
+    print(f"  evictions  : {s['n_evicted_edges']} edges")
+    print(f"  fragmented : {s['n_fragmented']} layers "
+          f"(mean m={s['mean_frag_ratio']:.2f})")
+    for e in res.partitioning.graph.edges():
+        if e.evicted:
+            print(f"    evicted: {e.src} -> {e.dst}  codec={e.codec}")
+    plan = plan_from_dse("unet", dev.name, res)
+    print(f"\nExecutionPlan: {plan.n_stages} stage(s), "
+          f"{len(plan.layers)} layers; est {plan.est_throughput_fps:.2f} fps")
+
+
+if __name__ == "__main__":
+    main()

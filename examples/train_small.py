@@ -1,0 +1,82 @@
+"""Train a small LM with the fault-tolerant loop: checkpoints, deterministic
+data resume, straggler monitoring — then kill and resume to prove restart.
+
+    PYTHONPATH=src python examples/train_small.py --steps 60 --arch yi-6b
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import ARCHS
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import init_params, lm_loss
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.runtime.fault import FaultConfig, FaultTolerantLoop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps,
+                          weight_decay=0.01)
+    data = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch))
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="smof_ckpt_")
+    store = CheckpointStore(ckpt_dir, keep_last=2)
+
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    opt = init_opt_state(params, opt_cfg)
+    losses = []
+
+    @jax.jit
+    def train_step(state, batch):
+        params, opt = state
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch["tokens"], batch["labels"]))(params)
+        params, opt, metrics = adamw_update(params, grads, opt, opt_cfg)
+        return (params, opt), loss
+
+    def step_fn(state, batch):
+        new_state, loss = train_step(state, jax.tree.map(jnp.asarray, batch))
+        losses.append(float(loss))
+        return new_state
+
+    loop = FaultTolerantLoop(step_fn, store,
+                             FaultConfig(checkpoint_every=20))
+    half = args.steps // 2
+    print(f"training {cfg.name}: {args.steps} steps "
+          f"(batch {args.batch} x seq {args.seq}), ckpts -> {ckpt_dir}")
+    state = loop.run((params, opt), data.batch_at, start_step=0,
+                     num_steps=half)
+    print(f"  phase 1: loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"simulating node failure + restart...")
+
+    # "restart": a fresh loop restores the newest checkpoint and resumes the
+    # deterministic data stream at the right step
+    loop2 = FaultTolerantLoop(step_fn, store, FaultConfig(checkpoint_every=20))
+    state2, next_step = loop2.try_restore((params, opt))
+    print(f"  restored at step {next_step}")
+    loop2.run(state2, data.batch_at, start_step=next_step,
+              num_steps=args.steps - next_step)
+    print(f"  phase 2: final loss {losses[-1]:.3f} "
+          f"(start {losses[0]:.3f}; ln V = {np.log(cfg.vocab):.3f})")
+    print(f"  events: { [e['kind'] for e in loop.events + loop2.events] }")
+    assert losses[-1] < losses[0], "loss should decrease"
+    if args.ckpt_dir is None:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

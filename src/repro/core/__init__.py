@@ -1,0 +1,24 @@
+"""SMOF core: streaming memory optimisation with smart off-chip eviction.
+
+The paper's contribution (§III-IV) as a hardware-agnostic library: a layer
+graph IR, the activation-eviction / weight-fragmentation / subgraph-
+reconfiguration mechanisms with their cost models, the refined pipeline-depth
+estimator, and the greedy iterative DSE (Algorithm 1).
+"""
+from .graph import Edge, Graph, Vertex, WEIGHTY
+from .resources import (ALL_DEVICES, Device, get_device, TPU_V5E_KERNEL,
+                        TPU_V5E_RUNTIME, U200, VCU118, VCU1525, ZCU102)
+from .pipeline import (initiation_interval, initiation_rate, interval_prev,
+                       pipeline_depth, vertex_delays)
+from .eviction import (apply_eviction, candidate_evictions, evaluate_eviction,
+                       EvictionOption)
+from .fragmentation import (apply_fragmentation, candidate_fragmentations,
+                            evaluate_fragmentation, FragmentationOption)
+from .partition import (fits, initial_partition, latency_s, merge,
+                        Partitioning, subgraph_cost, throughput_fps)
+from .dse import DSEConfig, DSEResult, pack_onchip, run_dse
+from .plan import ExecutionPlan, LayerPlan, plan_from_dse, StreamPlan
+from .builders import (build_unet, build_unet3d, build_x3d_m, build_yolov8n,
+                       PAPER_MODELS, TABLE3)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,288 @@
+"""Graph builders for the paper's evaluated CNNs (Table III).
+
+Structurally faithful reconstructions of UNet, UNet3D, YOLOv8n and X3D-M as
+SMOF layer graphs — most importantly with the *long skip connections* whose
+deep synchronisation buffers the eviction mechanism targets.  Channel
+configurations follow the original papers; Table III's MAC/param counts are
+matched by `benchmarks/table3_models.py` within a small tolerance (the paper
+itself notes "optimised UNet architectures tailored to the HW design
+(variations in MACs)").
+"""
+from __future__ import annotations
+
+import math
+
+from .graph import Graph, Vertex
+
+
+class _B:
+    """Small chain-building helper."""
+
+    def __init__(self, g: Graph, word_bits: int = 8, weight_bits: int = 8):
+        self.g = g
+        self.wb = word_bits
+        self.qb = weight_bits
+        self.n = 0
+
+    def _name(self, kind: str) -> str:
+        self.n += 1
+        return f"{kind}_{self.n}"
+
+    def conv(self, prev: str | None, cin: int, cout: int, spatial: tuple[int, ...],
+             k: int = 3, stride: int = 1, kind: str = "conv",
+             groups: int = 1) -> tuple[str, tuple[int, ...]]:
+        out_sp = tuple(max(s // stride, 1) for s in spatial)
+        vol_out = math.prod(out_sp)
+        kd = k ** len(spatial)
+        macs = kd * (cin // groups) * cout * vol_out
+        weights = kd * (cin // groups) * cout
+        v = Vertex(self._name(kind), kind,
+                   work_macs=macs, weight_words=weights,
+                   in_words=cin * math.prod(spatial), out_words=cout * vol_out,
+                   word_bits=self.wb, weight_bits=self.qb,
+                   base_depth=k * out_sp[-1] * max(cin // groups, 1),
+                   max_par=min(kd * cin * cout, 16384))
+        self.g.add(v)
+        if prev:
+            self.g.connect(prev, v.name)
+        return v.name, out_sp
+
+    def simple(self, prev: str | list[str] | None, kind: str, cin: int,
+               spatial: tuple[int, ...], cout: int | None = None,
+               out_spatial: tuple[int, ...] | None = None,
+               max_par: int = 64) -> tuple[str, tuple[int, ...]]:
+        cout = cout or cin
+        out_sp = out_spatial or spatial
+        v = Vertex(self._name(kind), kind,
+                   in_words=cin * math.prod(spatial),
+                   out_words=cout * math.prod(out_sp),
+                   word_bits=self.wb, base_depth=2.0, max_par=max_par)
+        self.g.add(v)
+        preds = [prev] if isinstance(prev, str) else (prev or [])
+        for p in preds:
+            self.g.connect(p, v.name)
+        return v.name, out_sp
+
+
+# -----------------------------------------------------------------------------
+# UNet (Ronneberger et al.) — input (3, 368, 480); 4 skip connections
+# -----------------------------------------------------------------------------
+
+def build_unet(input_hw: tuple[int, int] = (368, 480), cin: int = 3,
+               base: int = 64, levels: int = 5, n_classes: int = 32) -> Graph:
+    g = Graph("unet")
+    b = _B(g)
+    inp, sp = b.simple(None, "input", cin, input_hw)
+    skips: list[tuple[str, int, tuple[int, int]]] = []
+    prev, c = inp, cin
+    # encoder
+    for lv in range(levels):
+        cout = base * (2 ** lv)
+        prev, sp = b.conv(prev, c, cout, sp)
+        prev, sp = b.simple(prev, "act", cout, sp)
+        prev, sp = b.conv(prev, cout, cout, sp)
+        prev, sp = b.simple(prev, "act", cout, sp)
+        c = cout
+        if lv < levels - 1:
+            skips.append((prev, c, sp))
+            prev, sp = b.simple(prev, "pool", c, sp,
+                                out_spatial=tuple(s // 2 for s in sp))
+    # decoder with long skips
+    for lv in reversed(range(levels - 1)):
+        cout = base * (2 ** lv)
+        prev, sp = b.conv(prev, c, cout, sp, k=2, kind="deconv")
+        sp = tuple(s * 2 for s in sp)
+        g.vertex(prev).out_words = cout * math.prod(sp)
+        skip, sc, ssp = skips.pop()
+        prev, sp = b.simple([skip, prev], "concat", cout + sc, sp)
+        prev, sp = b.conv(prev, cout + sc, cout, sp)
+        prev, sp = b.simple(prev, "act", cout, sp)
+        prev, sp = b.conv(prev, cout, cout, sp)
+        prev, sp = b.simple(prev, "act", cout, sp)
+        c = cout
+    prev, sp = b.conv(prev, c, n_classes, sp, k=1)
+    b.simple(prev, "output", n_classes, sp)
+    return g
+
+
+# -----------------------------------------------------------------------------
+# UNet3D (Cicek et al.) — input (4, 155, 240, 240)
+# -----------------------------------------------------------------------------
+
+def build_unet3d(input_dhw: tuple[int, int, int] = (155, 240, 240), cin: int = 4,
+                 base: int = 10, levels: int = 5, max_ch: int = 160,
+                 n_classes: int = 3) -> Graph:
+    g = Graph("unet3d")
+    b = _B(g)
+    inp, sp = b.simple(None, "input", cin, input_dhw)
+    skips: list[tuple[str, int, tuple[int, ...]]] = []
+    prev, c = inp, cin
+    for lv in range(levels):
+        c1 = min(base * (2 ** lv), max_ch)
+        c2 = min(c1 * 2, max_ch)
+        prev, sp = b.conv(prev, c, c1, sp)
+        prev, sp = b.simple(prev, "act", c1, sp)
+        prev, sp = b.conv(prev, c1, c2, sp)
+        prev, sp = b.simple(prev, "act", c2, sp)
+        c = c2
+        if lv < levels - 1:
+            skips.append((prev, c, sp))
+            prev, sp = b.simple(prev, "pool", c, sp,
+                                out_spatial=tuple(max(s // 2, 1) for s in sp))
+    for lv in reversed(range(levels - 1)):
+        cout = min(base * (2 ** lv) * 2, max_ch)
+        prev, sp = b.conv(prev, c, c, sp, k=2, kind="deconv")
+        sp = tuple(s * 2 for s in sp)
+        g.vertex(prev).out_words = c * math.prod(sp)
+        skip, sc, ssp = skips.pop()
+        sp = ssp
+        prev, sp = b.simple([skip, prev], "concat", c + sc, sp)
+        prev, sp = b.conv(prev, c + sc, cout, sp)
+        prev, sp = b.simple(prev, "act", cout, sp)
+        prev, sp = b.conv(prev, cout, cout, sp)
+        prev, sp = b.simple(prev, "act", cout, sp)
+        c = cout
+    prev, sp = b.conv(prev, c, n_classes, sp, k=1)
+    b.simple(prev, "output", n_classes, sp)
+    return g
+
+
+# -----------------------------------------------------------------------------
+# YOLOv8n — input (3, 640, 640); CSP backbone + PAN neck (branchy)
+# -----------------------------------------------------------------------------
+
+def _c2f(b: _B, prev: str, c: int, sp, n: int = 1) -> tuple[str, tuple]:
+    """C2f block: split, n bottlenecks with residual adds, concat, fuse."""
+    half = max(c // 2, 8)
+    top, _ = b.conv(prev, c, half, sp, k=1)
+    bot, _ = b.conv(prev, c, half, sp, k=1)
+    feats = [top, bot]
+    cur = bot
+    for _ in range(n):
+        h1, _ = b.conv(cur, half, half, sp)
+        h1, _ = b.simple(h1, "act", half, sp)
+        h2, _ = b.conv(h1, half, half, sp)
+        cur, _ = b.simple([cur, h2], "add", half, sp)
+        feats.append(cur)
+    cat, _ = b.simple(feats, "concat", half * len(feats), sp)
+    out, sp = b.conv(cat, half * len(feats), c, sp, k=1)
+    return out, sp
+
+
+def build_yolov8n(input_hw: tuple[int, int] = (640, 640), cin: int = 3,
+                  widths=(16, 32, 64, 128, 256), n_classes: int = 80) -> Graph:
+    g = Graph("yolov8n")
+    b = _B(g)
+    inp, sp = b.simple(None, "input", cin, input_hw)
+    prev, c = inp, cin
+    pyramid: list[tuple[str, int, tuple]] = []
+    for i, w in enumerate(widths):
+        prev, sp = b.conv(prev, c, w, sp, stride=2)
+        prev, sp = b.simple(prev, "act", w, sp)
+        c = w
+        if i >= 1:
+            prev, sp = _c2f(b, prev, c, sp, n=2 if i in (2, 3) else 1)
+        if i >= 2:
+            pyramid.append((prev, c, sp))
+    # SPPF: 1x1 squeeze, cascaded pools re-concatenated, 1x1 fuse
+    p3, p4, p5 = pyramid
+    sq, _ = b.conv(p5[0], p5[1], p5[1] // 2, p5[2], k=1)
+    pools = [sq]
+    cur = sq
+    for _ in range(3):
+        cur, _ = b.simple(cur, "pool", p5[1] // 2, p5[2])
+        pools.append(cur)
+    cat, _ = b.simple(pools, "concat", p5[1] * 2, p5[2])
+    sppf, _ = b.conv(cat, p5[1] * 2, p5[1], p5[2], k=1)
+    p5 = (sppf, p5[1], p5[2])
+    # PAN neck: top-down then bottom-up with skip concats (long branches)
+    up5, _ = b.simple(p5[0], "upsample", p5[1], p5[2],
+                      out_spatial=tuple(s * 2 for s in p5[2]))
+    cat4, _ = b.simple([p4[0], up5], "concat", p4[1] + p5[1], p4[2])
+    n4, _ = _c2f(b, cat4, p4[1], p4[2])
+    up4, _ = b.simple(n4, "upsample", p4[1], p4[2],
+                      out_spatial=tuple(s * 2 for s in p4[2]))
+    cat3, _ = b.simple([p3[0], up4], "concat", p3[1] + p4[1], p3[2])
+    n3, _ = _c2f(b, cat3, p3[1], p3[2])
+    d3, _ = b.conv(n3, p3[1], p3[1], p3[2], stride=2)
+    cat4b, _ = b.simple([d3, n4], "concat", p3[1] + p4[1], p4[2])
+    n4b, _ = _c2f(b, cat4b, p4[1], p4[2])
+    d4, _ = b.conv(n4b, p4[1], p4[1], p4[2], stride=2)
+    cat5, _ = b.simple([d4, p5[0]], "concat", p4[1] + p5[1], p5[2])
+    n5, _ = _c2f(b, cat5, p5[1], p5[2])
+    # decoupled detect head: box + cls branch per scale
+    outs = []
+    hw_box, hw_cls = 64, 64
+    for hd, cch, hsp in ((n3, p3[1], p3[2]), (n4b, p4[1], p4[2]), (n5, p5[1], p5[2])):
+        bx, _ = b.conv(hd, cch, hw_box, hsp)
+        bx, _ = b.conv(bx, hw_box, hw_box, hsp)
+        bx, _ = b.conv(bx, hw_box, 4 * 16, hsp, k=1)
+        cl, _ = b.conv(hd, cch, hw_cls, hsp)
+        cl, _ = b.conv(cl, hw_cls, n_classes, hsp, k=1)
+        o, _ = b.simple([bx, cl], "concat", 64 + n_classes, hsp)
+        outs.append(o)
+    b.simple(outs, "output", 3 * (64 + n_classes), p3[2])
+    return g
+
+
+# -----------------------------------------------------------------------------
+# X3D-M — input (3, 16, 256, 256); mobile inverted-bottleneck 3D stages
+# -----------------------------------------------------------------------------
+
+def build_x3d_m(frames: int = 16, hw: int = 256, cin: int = 3,
+                stage_channels=(24, 48, 96, 192), stage_depths=(3, 5, 11, 7),
+                expansion: float = 2.25, n_classes: int = 101) -> Graph:
+    g = Graph("x3d_m")
+    b = _B(g)
+    sp = (frames, hw, hw)
+    inp, sp = b.simple(None, "input", cin, sp)
+    # stem: 1x3x3 spatial + 3x1x1 temporal (approximated as two convs)
+    prev, sp = b.conv(inp, cin, 24, (sp[1], sp[2]), stride=2)
+    sp = (frames, hw // 2, hw // 2)
+    g.vertex(prev).out_words = 24 * math.prod(sp)
+    c = 24
+    for ci, (w, d) in enumerate(zip(stage_channels, stage_depths)):
+        for blk in range(d):
+            stride = 2 if blk == 0 else 1          # every stage downsamples
+            mid = int(w * expansion)
+            res = prev
+            h, _ = b.conv(prev, c, mid, sp, k=1)
+            h, _ = b.simple(h, "act", mid, sp)
+            out_sp = (sp[0], max(sp[1] // stride, 1), max(sp[2] // stride, 1))
+            h, _ = b.conv(h, mid, mid, sp, k=3, stride=1, kind="dwconv", groups=mid)
+            g.vertex(h).out_words = mid * math.prod(out_sp)
+            sp2 = out_sp
+            h, _ = b.simple(h, "act", mid, sp2)
+            if blk % 2 == 0:                       # SE on alternate blocks
+                se1, _ = b.conv(h, mid, max(mid // 16, 4), (1, 1, 1), k=1)
+                se2, _ = b.conv(se1, max(mid // 16, 4), mid, (1, 1, 1), k=1)
+                h, _ = b.simple([h, se2], "add", mid, sp2)
+            h, _ = b.conv(h, mid, w, sp2, k=1)
+            if stride == 1 and c == w:
+                prev, _ = b.simple([res, h], "add", w, sp2)
+            else:
+                prev = h
+            sp, c = sp2, w
+    prev, _ = b.conv(prev, c, int(c * expansion), sp, k=1)
+    c = int(c * expansion)
+    prev, _ = b.simple(prev, "pool", c, sp, out_spatial=(1, 1, 1))
+    prev, _ = b.conv(prev, c, 2048, (1, 1, 1), k=1)
+    prev, _ = b.conv(prev, 2048, n_classes, (1, 1, 1), k=1)
+    b.simple(prev, "output", n_classes, (1, 1, 1))
+    return g
+
+
+PAPER_MODELS = {
+    "unet": build_unet,
+    "unet3d": build_unet3d,
+    "yolov8n": build_yolov8n,
+    "x3d_m": build_x3d_m,
+}
+
+# Table III reference values (MACs in G, params in M) for validation.
+TABLE3 = {
+    "yolov8n": {"macs_g": 4.37, "params_m": 3.16, "layers": 115, "convs": 63},
+    "unet": {"macs_g": 130.12, "params_m": 28.96, "layers": 53, "convs": 23},
+    "unet3d": {"macs_g": 918.64, "params_m": 5.65, "layers": 52, "convs": 19},
+    "x3d_m": {"macs_g": 6.97, "params_m": 3.82, "layers": 396, "convs": 115},
+}

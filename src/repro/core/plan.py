@@ -1,0 +1,89 @@
+"""ExecutionPlan — the contract between the SMOF DSE and the TPU runtime.
+
+The DSE (core/dse.py) reasons about an abstract device; this module projects
+its decisions onto concrete knobs the JAX runtime understands:
+
+* partition list      -> staged-executor stages / PP stage boundaries
+* eviction decisions  -> which long-lived streams (KV cache, encoder output,
+                         1F1B stashes) are offloaded + their codec
+* fragmentation m     -> per-layer static VMEM fraction for the
+                         ``streamed_matmul`` kernel / host weight streaming
+* parallelism p       -> per-layer sharding hints (TP width)
+* remat policy        -> store / recompute / offload per activation class
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from .dse import DSEResult
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    name: str
+    stage: int = 0
+    tp_parallelism: int = 1
+    weight_static_fraction: float = 1.0    # 1 - m
+    weight_stream_codec: str = "none"
+
+
+@dataclasses.dataclass
+class StreamPlan:
+    src: str
+    dst: str
+    evicted: bool = False
+    codec: str = "none"
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    model: str
+    device: str
+    n_stages: int
+    layers: dict[str, LayerPlan]
+    streams: list[StreamPlan]
+    remat: str = "none"                    # none | dots | full | offload
+    microbatch: int = 1
+    est_throughput_fps: float = 0.0
+    est_latency_s: float = 0.0
+
+    # -- serialisation --------------------------------------------------------
+    def to_json(self) -> str:
+        def enc(o: Any):
+            if dataclasses.is_dataclass(o):
+                return dataclasses.asdict(o)
+            raise TypeError(type(o))
+        return json.dumps(dataclasses.asdict(self), default=enc, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "ExecutionPlan":
+        d = json.loads(s)
+        d["layers"] = {k: LayerPlan(**v) for k, v in d["layers"].items()}
+        d["streams"] = [StreamPlan(**v) for v in d["streams"]]
+        return ExecutionPlan(**d)
+
+    def stage_layers(self, stage: int) -> list[str]:
+        return [n for n, lp in self.layers.items() if lp.stage == stage]
+
+
+def plan_from_dse(model: str, device: str, res: DSEResult,
+                  remat: str = "none", microbatch: int = 1) -> ExecutionPlan:
+    """Project a DSEResult into an ExecutionPlan."""
+    g = res.partitioning.graph
+    layers: dict[str, LayerPlan] = {}
+    for stage, names in enumerate(res.partitioning.parts):
+        for n in names:
+            v = g.vertex(n)
+            layers[n] = LayerPlan(
+                name=n, stage=stage, tp_parallelism=v.par,
+                weight_static_fraction=1.0 - v.frag_ratio,
+                weight_stream_codec=v.meta.get("frag_codec", "none"),
+            )
+    streams = [StreamPlan(e.src, e.dst, e.evicted, e.codec) for e in g.edges()]
+    return ExecutionPlan(
+        model=model, device=device, n_stages=res.partitioning.n,
+        layers=layers, streams=streams, remat=remat, microbatch=microbatch,
+        est_throughput_fps=res.throughput_fps, est_latency_s=res.latency_s,
+    )

@@ -1,0 +1,76 @@
+"""BFP8 quant / dequant Pallas kernels — the paper's §V-A block-floating-
+point format as the on-device eviction codec.
+
+Evicted streams (KV pages, skip activations, fragmented weight panels) pass
+through these before crossing the HBM<->host boundary: 16-bit words become
+8-bit mantissas + one shared exponent per ``block`` values, the fixed
+compile-time ratio ``(8 + 8/block)/16`` the DSE's Eq. 2/4 uses.
+
+Tiling: one grid step processes a (rows_per_step, C) stripe held in VMEM;
+the block reduction (amax -> exponent) is a lane-wise reshape, which keeps
+everything in 8x128-friendly layouts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, man_ref, exp_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)                  # (R, C)
+    R, C = x.shape
+    xb = x.reshape(R, C // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)                # (R, C//block)
+    exp = jnp.where(amax > 0,
+                    jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-38))), 0.0)
+    scale = jnp.exp2(exp - 6.0)
+    man = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    man_ref[...] = man.reshape(R, C).astype(jnp.int8)
+    exp_ref[...] = exp.astype(jnp.int8)
+
+
+def _dequant_kernel(man_ref, exp_ref, o_ref, *, block: int):
+    man = man_ref[...].astype(jnp.float32)
+    R, C = man.shape
+    scale = jnp.exp2(exp_ref[...].astype(jnp.float32) - 6.0)
+    out = man.reshape(R, C // block, block) * scale[..., None]
+    o_ref[...] = out.reshape(R, C).astype(o_ref.dtype)
+
+
+def bfp8_quant(x: jax.Array, *, block: int = 32, rows: int = 256,
+               interpret: bool = False):
+    """x: (R, C), C % block == 0 -> (mantissa int8 (R,C), exponent int8
+    (R, C/block))."""
+    R, C = x.shape
+    rows = min(rows, R)
+    assert R % rows == 0 and C % block == 0, (x.shape, rows, block)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, block=block),
+        grid=(R // rows,),
+        in_specs=[pl.BlockSpec((rows, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, C), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, C // block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, C), jnp.int8),
+                   jax.ShapeDtypeStruct((R, C // block), jnp.int8)],
+        interpret=interpret,
+    )(x)
+
+
+def bfp8_dequant(man: jax.Array, exp: jax.Array, *, block: int = 32,
+                 rows: int = 256, dtype=jnp.float32,
+                 interpret: bool = False) -> jax.Array:
+    R, C = man.shape
+    rows = min(rows, R)
+    assert R % rows == 0
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, block=block),
+        grid=(R // rows,),
+        in_specs=[pl.BlockSpec((rows, C), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, C // block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), dtype),
+        interpret=interpret,
+    )(man, exp)

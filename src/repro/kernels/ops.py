@@ -1,0 +1,70 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True when no TPU is present so the same call
+sites run on CPU (kernel bodies executed in Python) and compile to Mosaic
+on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bfp8 import bfp8_dequant, bfp8_quant
+from .flash_attention import flash_attention
+from .streamed_matmul import streamed_matmul, vmem_bytes
+from . import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("static_fraction", "bm", "bk",
+                                             "bn", "interpret"))
+def fragmented_matmul(x: jax.Array, w: jax.Array, *,
+                      static_fraction: float = 0.5, bm: int = 128,
+                      bk: int = 128, bn: int = 128,
+                      interpret: bool | None = None) -> jax.Array:
+    """y = x @ w with the leading ``static_fraction`` of w's rows pinned in
+    VMEM (the paper's 1 - m) and the rest streamed — the public form of the
+    weight-fragmentation kernel, splitting w at a 128-aligned row."""
+    K = w.shape[0]
+    ks = max(int(round(static_fraction * K / 128.0)) * 128, 0)
+    ks = min(ks, K - 128) if K > 128 else 0
+    if interpret is None:
+        interpret = not _on_tpu()
+    if ks <= 0:
+        return streamed_matmul(x, w[:128], w[128:], bm=bm, bk=bk, bn=bn,
+                               interpret=interpret) if K > 128 else \
+            jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    return streamed_matmul(x, w[:ks], w[ks:], bm=bm, bk=bk, bn=bn,
+                           interpret=interpret)
+
+
+def flash_attn(q, k, v, *, causal=True, bq=256, bk=256, interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                           interpret=interpret)
+
+
+def evict_encode(x: jax.Array, *, block: int = 32, interpret=None):
+    """Quantise an eviction stream to BFP8 before it leaves HBM."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return bfp8_quant(x, block=block, interpret=interpret)
+
+
+def evict_decode(man, exp, *, block: int = 32, dtype=jnp.float32,
+                 interpret=None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return bfp8_dequant(man, exp, block=block, dtype=dtype,
+                        interpret=interpret)
+
+
+__all__ = ["fragmented_matmul", "flash_attn", "evict_encode", "evict_decode",
+           "streamed_matmul", "flash_attention", "bfp8_quant", "bfp8_dequant",
+           "vmem_bytes", "ref"]

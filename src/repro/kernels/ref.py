@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def streamed_matmul_ref(x: jax.Array, w_static: jax.Array,
+                        w_dyn: jax.Array) -> jax.Array:
+    """y = x @ [w_static; w_dyn] — the fragmentation split is semantically
+    invisible; only the memory placement differs."""
+    w = jnp.concatenate([w_static, w_dyn], axis=0)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32
+                   ).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True) -> jax.Array:
+    """Plain softmax attention.  q,k,v: (B, S, H, D) (kv heads pre-repeated)."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -2.0 ** 30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def bfp8_quant_ref(x: jax.Array, block: int = 32):
+    """Block floating point: int8 mantissas + per-block exponent.
+    x: (R, C) with C % block == 0.  Returns (mantissa i8, exponent i8)."""
+    R, C = x.shape
+    xb = x.astype(jnp.float32).reshape(R, C // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    exp = jnp.where(amax > 0,
+                    jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-38))), 0.0)
+    scale = jnp.exp2(exp - 6.0)
+    man = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    return man.reshape(R, C).astype(jnp.int8), exp.astype(jnp.int8)
+
+
+def bfp8_dequant_ref(man: jax.Array, exp: jax.Array, block: int = 32,
+                     dtype=jnp.float32) -> jax.Array:
+    R, C = man.shape
+    scale = jnp.exp2(exp.astype(jnp.float32) - 6.0)
+    out = man.astype(jnp.float32).reshape(R, C // block, block) \
+        * scale[..., None]
+    return out.reshape(R, C).astype(dtype)

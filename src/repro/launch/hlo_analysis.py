@@ -1,0 +1,285 @@
+"""Post-compile HLO analysis: collective-traffic accounting for §Roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes but NOT collective
+traffic, so we parse the optimised HLO text and sum the *operand* bytes of
+every communication op:
+
+  all-reduce           operand = result
+  all-gather           operand = result / group_size
+  reduce-scatter       operand = result * group_size
+  all-to-all           operand = result
+  collective-permute   operand = result
+
+Async pairs (``-start`` / ``-done``) are counted once, on the start op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+# e.g.  bf16[2,4096,512]{2,1,0}
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# e.g.  replica_groups=[32,16]<=[512]   or  replica_groups={{0,1},{2,3}}
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Byte counts are PER-DEVICE operand bytes, summed over ops."""
+    by_kind: dict
+    total_bytes: float
+    n_ops: int
+
+    def to_json(self) -> dict:
+        return {"by_kind": self.by_kind, "total_bytes": self.total_bytes,
+                "n_ops": self.n_ops}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    by_kind: dict[str, float] = {}
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        op = None
+        for kind in _COLL:
+            # match " = TYPE kind(" and async "kind-start("; skip -done
+            if (f" {kind}(" in stripped or f" {kind}-start(" in stripped):
+                op = kind
+                break
+        if op is None or "-done(" in stripped:
+            continue
+        # the first type token after "= " is the result type; tuples (async
+        # start) list operand then result — take the LAST full shape, which
+        # is the payload, and fall back to the first.
+        after = stripped.split("= ", 1)
+        if len(after) != 2:
+            continue
+        types = _TYPE_RE.findall(after[1].split("(")[0])
+        if not types:
+            continue
+        result_bytes = max(_shape_bytes(dt, dims) for dt, dims in types)
+        g = _group_size(stripped)
+        if op == "all-gather":
+            operand = result_bytes / max(g, 1)
+        elif op == "reduce-scatter":
+            operand = result_bytes * max(g, 1)
+        else:
+            operand = result_bytes
+        by_kind[op] = by_kind.get(op, 0.0) + operand
+        n_ops += 1
+    return CollectiveStats(by_kind=by_kind,
+                           total_bytes=sum(by_kind.values()), n_ops=n_ops)
+
+
+# =============================================================================
+# Trip-count-aware accounting
+#
+# XLA's cost_analysis() counts each while-loop body ONCE (verified on this
+# jax build), so for scan-over-layers models both FLOPs and collective bytes
+# are understated by the trip count.  We parse the optimised HLO into its
+# computations, recover each loop's trip count from its condition
+# computation, propagate call-multipliers from the entry computation, and
+# re-account dot FLOPs and collective operand bytes with multipliers.
+# =============================================================================
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_OP_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*(\w+)\[([\d,]*)\]")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_computations(hlo: str) -> dict[str, dict]:
+    """name -> {"lines": [...], "entry": bool, "params": {name: (dt, dims)}}"""
+    comps: dict[str, dict] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            name = m.group(2)
+            params = {pm.group(1): (pm.group(2), pm.group(3))
+                      for pm in _PARAM_RE.finditer(m.group(3))}
+            cur = {"lines": [], "entry": bool(m.group(1)), "params": params}
+            comps[name] = cur
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                cur["lines"].append(line)
+    return comps
+
+
+def _trip_count(cond_comp: dict) -> int:
+    """Loop bound heuristic: the largest integer constant compared in the
+    condition computation (scan conditions are `i < N`)."""
+    consts = [int(c) for ln in cond_comp["lines"]
+              for c in _CONST_RE.findall(ln)]
+    return max(consts, default=1)
+
+
+def _multipliers(comps: dict[str, dict]) -> dict[str, float]:
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    mult: dict[str, float] = {}
+    if entry is None:
+        return {n: 1.0 for n in comps}
+    stack = [(entry, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        if name not in comps or mult.get(name, 0.0) >= m:
+            continue
+        mult[name] = max(mult.get(name, 0.0), m)
+        for ln in comps[name]["lines"]:
+            callees = _CALL_ATTR_RE.findall(ln)
+            br = _BRANCHES_RE.search(ln)
+            if br:
+                callees += [c.strip().lstrip("%") for c in br.group(1).split(",")]
+            if " while(" in ln or ln.strip().startswith("while"):
+                trip = 1
+                cond = re.search(r"condition=%?([\w.\-]+)", ln)
+                if cond and cond.group(1) in comps:
+                    trip = _trip_count(comps[cond.group(1)])
+                for c in callees:
+                    stack.append((c, m * trip))
+            else:
+                for c in callees:
+                    stack.append((c, m))
+    for n in comps:
+        mult.setdefault(n, 1.0)
+    return mult
+
+
+def _symbols(comp: dict) -> dict[str, tuple[str, str]]:
+    syms = dict(comp["params"])
+    for ln in comp["lines"]:
+        m = _OP_DEF_RE.match(ln)
+        if m:
+            syms[m.group(1)] = (m.group(2), m.group(3))
+    return syms
+
+
+def _dims(dims_str: str) -> list[int]:
+    return [int(d) for d in dims_str.split(",") if d]
+
+
+def trip_aware_stats(hlo: str) -> dict:
+    """Trip-count-aware dot FLOPs + collective operand bytes (per device)."""
+    comps = _parse_computations(hlo)
+    mult = _multipliers(comps)
+    flops = 0.0
+    dot_bytes = 0.0
+    by_kind: dict[str, float] = {}
+    n_ops = 0
+    trip_counts = {}
+    for name, comp in comps.items():
+        m = mult[name]
+        syms = _symbols(comp)
+        for ln in comp["lines"]:
+            s = ln.strip()
+            # ---- dots ----------------------------------------------------
+            if " dot(" in s:
+                mdef = _OP_DEF_RE.match(ln)
+                mc = _DOT_DIMS_RE.search(s)
+                if not (mdef and mc):
+                    continue
+                out_dims = _dims(mdef.group(3))
+                # lhs operand: first %ref inside dot(...)
+                ops = re.findall(r"dot\(([^)]*)\)", s)
+                lhs_shape = None
+                if ops:
+                    first = ops[0].split(",")[0].strip()
+                    tm = _TYPE_RE.search(first)
+                    if tm:
+                        lhs_shape = _dims(tm.group(2))
+                    else:
+                        ref = first.lstrip("%")
+                        if ref in syms:
+                            lhs_shape = _dims(syms[ref][1])
+                if lhs_shape is None:
+                    continue
+                contract = 1
+                for ci in _dims(mc.group(1)):
+                    if ci < len(lhs_shape):
+                        contract *= lhs_shape[ci]
+                f = 2.0 * contract
+                for d in out_dims:
+                    f *= d
+                flops += f * m
+                out_bytes = _shape_bytes(mdef.group(2), mdef.group(3))
+                dot_bytes += (out_bytes + out_bytes * contract
+                              / max(out_dims[-1] if out_dims else 1, 1)) * m
+                continue
+            # ---- collectives ----------------------------------------------
+            for kind in _COLL:
+                if (f" {kind}(" in s or f" {kind}-start(" in s) \
+                        and "-done(" not in s:
+                    after = s.split("= ", 1)
+                    if len(after) != 2:
+                        break
+                    types = _TYPE_RE.findall(after[1].split("(")[0])
+                    if not types:
+                        break
+                    rb = max(_shape_bytes(dt, dims) for dt, dims in types)
+                    g = _group_size(s)
+                    operand = (rb / max(g, 1) if kind == "all-gather"
+                               else rb * max(g, 1) if kind == "reduce-scatter"
+                               else rb)
+                    by_kind[kind] = by_kind.get(kind, 0.0) + operand * m
+                    n_ops += 1
+                    break
+        if m > 1:
+            trip_counts[name] = m
+    return {
+        "flops_dot": flops,
+        "dot_bytes": dot_bytes,
+        "collectives": CollectiveStats(by_kind=by_kind,
+                                       total_bytes=sum(by_kind.values()),
+                                       n_ops=n_ops).to_json(),
+        "n_looped_computations": len(trip_counts),
+        "max_multiplier": max(trip_counts.values(), default=1.0),
+    }
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: getattr(ma, k, 0) for k in keys}
+
+
+def cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (jax locks the device count on first init, and the
+smoke tests / benches must see 1 CPU device while the dry-run sees 512
+placeholders via XLA_FLAGS).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1x1 mesh on the single real CPU device (examples / tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

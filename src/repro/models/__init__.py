@@ -1,0 +1,9 @@
+"""Model zoo: configs + pure-JAX implementations of all assigned families
+(dense GQA transformers, MoE, Mamba/mLSTM/sLSTM mixers, enc-dec, VLM stub).
+"""
+from .config import ArchConfig, MoECfg
+from .model import (decode_step, forward, init_cache, init_params, lm_loss,
+                    param_count, project_logits)
+
+__all__ = ["ArchConfig", "MoECfg", "decode_step", "forward", "init_cache",
+           "init_params", "lm_loss", "param_count", "project_logits"]

@@ -1,0 +1,223 @@
+"""GQA attention: chunked (flash-style) prefill and KV-cache decode.
+
+The prefill path streams over KV chunks with an online-softmax accumulator —
+``jax.lax.scan`` keeps the HLO O(1) in sequence length and bounds the live
+score block to (B, H, S_q, chunk), which is what lets the 32k-token cells
+fit the dry-run memory analysis.  It is also the jnp oracle for the Pallas
+flash kernel (kernels/flash_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_mrope, apply_rope, dense_init, text_mrope_positions
+
+NEG_INF = -2.0 ** 30
+
+
+def _divisor_chunk(n: int, target: int) -> int:
+    """Largest chunk <= target that divides n (handles e.g. whisper's 1500)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def attn_params(key, cfg, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": dense_init(k1, (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(k2, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(k3, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(k4, (cfg.n_heads * hd, d), dtype),
+    }
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg, pos: jax.Array,
+                 repeat_kv: bool = False):
+    """QKV projections.  With ``repeat_kv`` the KV weight blocks are
+    broadcast to all H query heads BEFORE the matmul, so the resulting
+    activations have a full H head axis that shards cleanly over the
+    ``model`` mesh axis (a KH=4 head axis cannot shard over 16) — the extra
+    weight copies are tiny next to the activation all-gather they avoid."""
+    B, S, _ = x.shape
+    hd, KH, H = cfg.hd, cfg.n_kv_heads, cfg.n_heads
+    G = H // KH
+    wk, wv = p["wk"], p["wv"]
+    if repeat_kv and G > 1:
+        d = wk.shape[0]
+        wk = jnp.repeat(wk.reshape(d, KH, hd), G, axis=1).reshape(d, H * hd)
+        wv = jnp.repeat(wv.reshape(d, KH, hd), G, axis=1).reshape(d, H * hd)
+        KH = H
+    from repro.runtime.hints import constrain
+    q = constrain((x @ p["wq"]).reshape(B, S, H, hd), "dp", None, "tp", None)
+    k = constrain((x @ wk).reshape(B, S, KH, hd), "dp", None, "tp", None)
+    v = constrain((x @ wv).reshape(B, S, KH, hd), "dp", None, "tp", None)
+    if cfg.rope == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        mpos = text_mrope_positions(pos)
+        q = apply_mrope(q, mpos, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mpos, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool, chunk: int = 1024, q_chunk: int = 512,
+                      q_offset: int = 0, skip_masked: bool = False) -> jax.Array:
+    """Flash-style online-softmax attention: outer scan over query blocks,
+    inner scan over KV blocks.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H a multiple of KH (GQA; KV
+    heads are broadcast to H so the head axis shards cleanly over the
+    ``model`` mesh axis).  The live score block is (B, q_chunk, H, chunk) and
+    each query-block body is rematerialised in the backward pass, so both
+    the forward temp and the autodiff residuals stay O(S * H * D).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    scale = D ** -0.5
+    chunk = _divisor_chunk(Sk, chunk)
+    q_chunk = _divisor_chunk(Sq, q_chunk)
+    nk, nq = Sk // chunk, Sq // q_chunk
+
+    from repro.runtime.hints import constrain
+    if G > 1:  # broadcast KV heads -> clean head sharding over "model"
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    # (n, B, blk, H, D) — keep heads on the tensor axis ("tp"): without this
+    # GSPMD loses the head sharding through rope/reshape and replicates the
+    # whole attention across the model axis (§Perf/H1: 16x flops).
+    kb = constrain(jnp.moveaxis(k.reshape(B, nk, chunk, H, D), 1, 0),
+                   None, "dp", None, "tp", None)
+    vb = constrain(jnp.moveaxis(v.reshape(B, nk, chunk, H, D), 1, 0),
+                   None, "dp", None, "tp", None)
+    qb = constrain(jnp.moveaxis((q * scale).reshape(B, nq, q_chunk, H, D), 1, 0),
+                   None, "dp", None, "tp", None)
+
+    def q_block_fn(_, xs):
+        qi, iq = xs                                        # (B,qc,H,D), idx
+        qf = qi.astype(jnp.float32)
+        q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj, vj, jk):
+            m, l, o = carry
+            s = jnp.einsum("bqhd,bkhd->bqhk", qf, kj.astype(jnp.float32))
+            if causal:
+                k_pos = jk * chunk + jnp.arange(chunk)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bqhk,bkhd->bqhd", p, vj.astype(jnp.float32))
+            return m_new, l_new, o_new
+
+        m0 = jnp.full((B, q_chunk, H), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, H), jnp.float32)
+        o0 = jnp.zeros((B, q_chunk, H, D), jnp.float32)
+        if skip_masked and causal:
+            # inference-only causal block skipping: only the kv blocks at or
+            # below this q block's diagonal run (dynamic trip count — not
+            # differentiable, so the train path keeps the full scan).
+            nk_eff = ((iq + 1) * q_chunk + q_offset + chunk - 1) // chunk
+            nk_eff = jnp.minimum(nk_eff, nk)
+
+            def body(j, carry):
+                kj = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+                vj = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+                return kv_step(carry, kj, vj, j)
+
+            m, l, o = jax.lax.fori_loop(0, nk_eff, body, (m0, l0, o0))
+        else:
+            def kv_block(carry, kv):
+                kj, vj, jk = kv
+                return kv_step(carry, kj, vj, jk), None
+
+            (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0),
+                                        (kb, vb, jnp.arange(nk)))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    q_block = q_block_fn if skip_masked else jax.checkpoint(q_block_fn)
+    _, blocks = jax.lax.scan(q_block, None, (qb, jnp.arange(nq)))
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, H, D)
+
+
+def prefill_attention(p: dict, x: jax.Array, cfg, pos: jax.Array,
+                      *, chunk: int = 1024, inference: bool = False):
+    """Full-sequence causal self-attention; returns (out, (k, v) cache).
+    The returned cache keeps the true KH KV heads (strided slice of the
+    weight-repeated heads).  ``inference`` enables causal block skipping
+    (dynamic-trip loop, forward-only)."""
+    B, S, _ = x.shape
+    G = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _project_qkv(p, x, cfg, pos, repeat_kv=True)
+    out = chunked_attention(q, k, v, causal=True, chunk=min(chunk, S),
+                            skip_masked=inference)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, (k[:, :, ::G], v[:, :, ::G])
+
+
+def decode_attention(p: dict, x: jax.Array, cfg, cache: tuple, pos: jax.Array):
+    """Single-token decode against a (B, S_max, KH, D) KV cache.
+
+    ``pos``: (B,) absolute position of the incoming token.  The cache is
+    updated in place at ``pos`` and positions > pos are masked out.
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    ck, cv = cache
+    S_max = ck.shape[1]
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None])
+    # scatter the new kv at pos — .at[].set lowers to a scatter, which GSPMD
+    # keeps sharded on a sequence-sharded cache (a dynamic-update-slice
+    # would all-gather the shard axis)
+    rows = jnp.arange(ck.shape[0])
+    ck = ck.at[rows, pos].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[rows, pos].set(v[:, 0].astype(cv.dtype))
+    KH, D = cfg.n_kv_heads, cfg.hd
+    G = cfg.n_heads // KH
+    # NB: never .astype() the cache — XLA hoists the convert out of the
+    # layer-group scan and materialises the full stacked cache in f32.
+    # Mixed-precision dots with a f32 accumulator keep the cache bf16.
+    qf = (q * D ** -0.5).reshape(B, KH, G, D).astype(ck.dtype)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, ck,
+                   preferred_element_type=jnp.float32)
+    mask = jnp.arange(S_max)[None] <= pos[:, None]        # (B, S_max)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    out = o.reshape(B, 1, cfg.n_heads * D).astype(x.dtype) @ p["wo"]
+    return out, (ck, cv)
+
+
+def cross_attention(p: dict, x: jax.Array, enc: jax.Array, cfg,
+                    chunk: int = 512):
+    """Decoder->encoder cross attention (whisper).  enc: (B, T, d)."""
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (enc @ p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = (enc @ p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    out = chunked_attention(q, k, v, causal=False, chunk=min(chunk, T))
+    return out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+
+
+def encoder_attention(p: dict, x: jax.Array, cfg, pos: jax.Array,
+                      chunk: int = 512):
+    """Non-causal self-attention (whisper encoder)."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, pos, repeat_kv=True)
+    out = chunked_attention(q, k, v, causal=False, chunk=min(chunk, T))
+    return out.reshape(B, T, cfg.n_heads * cfg.hd) @ p["wo"]

@@ -1,0 +1,103 @@
+"""Shared model components: norms, activations, RoPE / M-RoPE, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# -- initialisers --------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# -- norms ---------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(kind: str, x: jax.Array, p: dict) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def norm_params(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+# -- activations ---------------------------------------------------------------
+
+def gated_act(kind: str, up: jax.Array, gate: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate) * up
+    raise ValueError(kind)
+
+
+# -- rotary embeddings -----------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float = 1e6) -> jax.Array:
+    """x: (..., S, H, D); pos: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)        # (D/2,)
+    ang = pos[..., :, None].astype(jnp.float32) * freqs           # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, pos: jax.Array, sections: tuple[int, int, int],
+                theta: float = 1e6) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): the rotary dims are split into three
+    sections (temporal, height, width), each rotated by its own position
+    stream.  ``pos``: (3, ..., S) — for pure text all three streams are the
+    same token index.  x: (..., S, H, D)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)        # (D/2,)
+    # section id per rotary frequency: [0]*s0 + [1]*s1 + [2]*s2
+    sec = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    assert sec.shape[0] == d // 2, (sections, d)
+    sec = jnp.asarray(sec)
+    # pick the per-frequency position stream: (..., S, D/2)
+    pos_f = jnp.take(pos.astype(jnp.float32), sec, axis=0)        # (..., S)? ->
+    # pos: (3, B, S) -> take along axis 0 with sec (D/2,) gives (D/2, B, S)
+    pos_f = jnp.moveaxis(pos_f, 0, -1)                            # (B, S, D/2)
+    ang = pos_f * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(pos: jax.Array) -> jax.Array:
+    """For text-only tokens the three M-RoPE streams coincide."""
+    return jnp.broadcast_to(pos[None], (3,) + pos.shape)

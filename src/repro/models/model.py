@@ -1,0 +1,349 @@
+"""Model assembly: params init, full-sequence forward (train / prefill),
+single-token decode — all scanning over *layer groups* so HLO size is O(1)
+in depth (DESIGN.md §6).
+
+A "group" is one period of the layer pattern (1 for homogeneous stacks,
+8 for jamba's 7-mamba:1-attn or xLSTM's 7-mLSTM:1-sLSTM).  Parameters are
+stacked over groups; `lax.scan` threads the residual stream through them.
+Heterogeneous positions inside a group are unrolled in the scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import moe as M
+from . import ssm as S
+from .common import apply_norm, dense_init, norm_params
+from .config import ArchConfig
+
+Params = dict
+LOSS_CHUNK = 512
+
+
+# =============================================================================
+# init
+# =============================================================================
+
+def _mixer_params(key, kind: str, cfg, dtype) -> dict:
+    if kind == "attn":
+        return A.attn_params(key, cfg, dtype)
+    if kind == "mamba":
+        return S.mamba_params(key, cfg, dtype)
+    if kind == "mlstm":
+        return S.mlstm_params(key, cfg, dtype)
+    if kind == "slstm":
+        return S.slstm_params(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _layer_params(key, cfg: ArchConfig, pos_in_group: int, layer_idx: int,
+                  dtype, cross_attn: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    kind = cfg.layer_kind(layer_idx)
+    p = {
+        "norm1": norm_params(cfg.norm, cfg.d_model, dtype),
+        "mixer": _mixer_params(ks[0], kind, cfg, dtype),
+    }
+    if cross_attn:
+        p["norm_x"] = norm_params(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = A.attn_params(ks[1], cfg, dtype)
+    if cfg.d_ff > 0:
+        p["norm2"] = norm_params(cfg.norm, cfg.d_model, dtype)
+        if cfg.layer_is_moe(layer_idx):
+            p["moe"] = M.moe_params(ks[2], cfg, dtype)
+        else:
+            p["ffn"] = M.dense_ffn_params(ks[3], cfg, dtype)
+    return p
+
+
+def _stack_groups(key, cfg: ArchConfig, dtype, cross_attn: bool,
+                  n_layers: int) -> dict:
+    """Per-position params stacked over groups: {pos_j: stacked pytree}."""
+    gs = cfg.group_size
+    n_groups = n_layers // gs
+    out: dict[str, Any] = {}
+    keys = jax.random.split(key, n_layers).reshape(n_groups, gs, -1)
+    for j in range(gs):
+        per_group = [
+            _layer_params(keys[g, j], cfg, j, g * gs + j, dtype, cross_attn)
+            for g in range(n_groups)]
+        out[f"pos_{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    return out
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        "groups": _stack_groups(ks[1], cfg, dtype,
+                                cross_attn=cfg.is_encdec,
+                                n_layers=cfg.n_layers),
+        "final_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.vocab, cfg.d_model), dtype,
+                                  scale=0.02)
+    if cfg.is_encdec:
+        enc_cfg = dataclasses.replace(cfg, pattern=("attn",), moe=None)
+        p["encoder"] = {
+            "groups": _stack_groups(ks[3], enc_cfg, dtype, cross_attn=False,
+                                    n_layers=cfg.encoder_layers),
+            "final_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+        }
+    return p
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# =============================================================================
+# layer application
+# =============================================================================
+
+def _apply_layer(lp: dict, x, cfg: ArchConfig, layer_idx: int, *,
+                 pos, enc=None, cache=None, mode: str):
+    """One transformer/SSM layer.  mode: "full" (train/prefill) | "decode".
+    Returns (x, new_cache, aux)."""
+    kind = cfg.layer_kind(layer_idx)
+    h = apply_norm(cfg.norm, x, lp["norm1"])
+    new_cache: dict = {}
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        if mode == "full":
+            # cache production == serving prefill == forward-only -> the
+            # causal-block-skipping (dynamic trip) attention is safe
+            out, (k, v) = A.prefill_attention(lp["mixer"], h, cfg, pos,
+                                              inference=cache is not None)
+            if cache is not None:
+                S_max = cache["k"].shape[1]
+                pad = [(0, 0), (0, S_max - k.shape[1]), (0, 0), (0, 0)]
+                new_cache = {"k": jnp.pad(k, pad).astype(cache["k"].dtype),
+                             "v": jnp.pad(v, pad).astype(cache["v"].dtype)}
+        else:
+            out, (ck, cv) = A.decode_attention(
+                lp["mixer"], h, cfg, (cache["k"], cache["v"]), pos)
+            new_cache = {"k": ck, "v": cv}
+    elif kind == "mamba":
+        fn = S.mamba_forward if mode == "full" else S.mamba_decode
+        out, st = (fn(lp["mixer"], h, cfg) if mode == "full"
+                   else fn(lp["mixer"], h, cfg, cache))
+        new_cache = st
+    elif kind == "mlstm":
+        out, st = (S.mlstm_forward(lp["mixer"], h, cfg) if mode == "full"
+                   else S.mlstm_decode(lp["mixer"], h, cfg, cache))
+        new_cache = st
+    elif kind == "slstm":
+        out, st = (S.slstm_forward(lp["mixer"], h, cfg) if mode == "full"
+                   else S.slstm_decode(lp["mixer"], h, cfg, cache))
+        new_cache = st
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if "cross" in lp:
+        hx = apply_norm(cfg.norm, x, lp["norm_x"])
+        if mode == "full":
+            x = x + A.cross_attention(lp["cross"], hx, enc, cfg)
+        else:
+            # decode: cross-KV precomputed at prefill
+            x = x + _cross_decode(lp["cross"], hx, cfg, cache)
+        if cache is not None and mode == "full":
+            new_cache.update(_cross_kv(lp["cross"], enc, cfg))
+        elif cache is not None:
+            new_cache.update({k: cache[k] for k in ("xk", "xv") if k in cache})
+
+    if cfg.d_ff > 0:
+        h2 = apply_norm(cfg.norm, x, lp["norm2"])
+        if "moe" in lp:
+            out2, a = M.apply_moe(lp["moe"], h2, cfg)
+            aux = aux + a
+        else:
+            out2 = M.apply_dense_ffn(lp["ffn"], h2, cfg)
+        x = x + out2
+    return x, new_cache, aux
+
+
+def _cross_kv(p: dict, enc, cfg) -> dict:
+    B, T, _ = enc.shape
+    k = (enc @ p["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    v = (enc @ p["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    return {"xk": k, "xv": v}
+
+
+def _cross_decode(p: dict, x, cfg, cache: dict):
+    B = x.shape[0]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+    out = A.chunked_attention(q, cache["xk"], cache["xv"], causal=False,
+                              chunk=min(512, cache["xk"].shape[1]))
+    return out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+# =============================================================================
+# cache construction
+# =============================================================================
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Stacked-over-groups cache pytree: {pos_j: per-kind state}."""
+    gs, ng = cfg.group_size, cfg.n_groups
+    cache: dict[str, Any] = {}
+    for j in range(gs):
+        kind = cfg.layer_kind(j)
+        if kind == "attn":
+            c = {"k": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.hd), dtype),
+                 "v": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.hd), dtype)}
+            if cfg.is_encdec:
+                c.update({
+                    "xk": jnp.zeros((batch, cfg.enc_frames, cfg.n_kv_heads,
+                                     cfg.hd), dtype),
+                    "xv": jnp.zeros((batch, cfg.enc_frames, cfg.n_kv_heads,
+                                     cfg.hd), dtype)})
+        elif kind == "mamba":
+            c = S.mamba_cache(batch, cfg, dtype)
+        elif kind == "mlstm":
+            c = S.mlstm_cache(batch, cfg, dtype)
+        elif kind == "slstm":
+            c = S.slstm_cache(batch, cfg, dtype)
+        else:
+            raise ValueError(kind)
+        cache[f"pos_{j}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (ng,) + x.shape), c)
+    return cache
+
+
+# =============================================================================
+# forward passes
+# =============================================================================
+
+def _embed(params, cfg, tokens, patch_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if patch_embeds is not None and cfg.vlm_patches:
+        P = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    return x
+
+
+def _encoder_forward(params, cfg: ArchConfig, frames):
+    """Whisper encoder over precomputed frame embeddings (B, T, d)."""
+    enc_cfg = dataclasses.replace(cfg, pattern=("attn",), moe=None,
+                                  encoder_layers=0)
+    x = frames
+    T = frames.shape[1]
+    pos = jnp.arange(T)[None]
+
+    def body(x, gp):
+        lp = gp["pos_0"]
+        h = apply_norm(cfg.norm, x, lp["norm1"])
+        x = x + A.encoder_attention(lp["mixer"], h, enc_cfg, pos)
+        h2 = apply_norm(cfg.norm, x, lp["norm2"])
+        x = x + M.apply_dense_ffn(lp["ffn"], h2, enc_cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["groups"])
+    return apply_norm(cfg.norm, x, params["encoder"]["final_norm"])
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+            enc_frames=None, patch_embeds=None, cache=None,
+            remat: str = "none", pos_offset=None):
+    """Full-sequence forward.  Returns (hidden, new_cache, aux_loss).
+
+    tokens: (B, S) int32.  With ``cache`` given (prefill), per-layer KV /
+    state caches are produced.  ``pos_offset``: (B,) start positions.
+    """
+    B, Sq = tokens.shape
+    x = _embed(params, cfg, tokens, patch_embeds)
+    pos = jnp.arange(Sq)[None]
+    if pos_offset is not None:
+        pos = pos + pos_offset[:, None]
+    enc = _encoder_forward(params, cfg, enc_frames) if cfg.is_encdec else None
+
+    gs = cfg.group_size
+
+    def group_body(carry, gxs):
+        x, aux = carry
+        gp = gxs["params"]
+        gc = gxs.get("cache")
+        new_gc = {}
+        for j in range(gs):
+            lp = gp[f"pos_{j}"]
+            c_j = gc[f"pos_{j}"] if gc is not None else None
+            x, nc, a = _apply_layer(lp, x, cfg, j, pos=pos, enc=enc,
+                                    cache=c_j, mode="full")
+            new_gc[f"pos_{j}"] = nc
+            aux = aux + a
+        return (x, aux), new_gc
+
+    if remat == "full":
+        group_body = jax.checkpoint(group_body)
+    elif remat == "dots":
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = {"params": params["groups"]}
+    if cache is not None:
+        xs["cache"] = cache
+    (x, aux), new_cache = jax.lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)), xs)
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    return x, (new_cache if cache is not None else None), aux
+
+
+def decode_step(params: Params, cfg: ArchConfig, token: jax.Array,
+                pos: jax.Array, cache: dict):
+    """One decode step.  token: (B, 1); pos: (B,).  Returns (logits, cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    gs = cfg.group_size
+
+    def group_body(x, gxs):
+        gp, gc = gxs["params"], gxs["cache"]
+        new_gc = {}
+        for j in range(gs):
+            x, nc, _ = _apply_layer(gp[f"pos_{j}"], x, cfg, j, pos=pos,
+                                    cache=gc[f"pos_{j}"], mode="decode")
+            new_gc[f"pos_{j}"] = nc
+        return x, new_gc
+
+    x, new_cache = jax.lax.scan(
+        group_body, x, {"params": params["groups"], "cache": cache})
+    x = apply_norm(cfg.norm, x, params["final_norm"])
+    logits = project_logits(params, cfg, x[:, 0])
+    return logits, new_cache
+
+
+def project_logits(params: Params, cfg: ArchConfig, x: jax.Array):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head.T).astype(jnp.float32)
+
+
+def lm_loss(params: Params, cfg: ArchConfig, tokens, labels, *,
+            enc_frames=None, patch_embeds=None, remat: str = "none"):
+    """Next-token cross-entropy, computed in sequence chunks so the full
+    (B, S, V) logits tensor never materialises."""
+    x, _, aux = forward(params, cfg, tokens, enc_frames=enc_frames,
+                        patch_embeds=patch_embeds, remat=remat)
+    B, Sq, d = x.shape
+    C = min(LOSS_CHUNK, Sq)
+    assert Sq % C == 0
+    xc = jnp.moveaxis(x.reshape(B, Sq // C, C, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, Sq // C, C), 1, 0)
+
+    @jax.checkpoint
+    def chunk_loss(tot, xs):
+        xb, lb = xs
+        logits = project_logits(params, cfg, xb)             # (B, C, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return tot + (lse - gold).sum(), None
+
+    tot, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xc, lc))
+    loss = tot / (B * Sq)
+    return loss + 0.01 * aux

@@ -1,0 +1,331 @@
+"""State-space / recurrent mixers: Mamba (jamba), mLSTM + sLSTM (xLSTM).
+
+Design notes (DESIGN.md §Arch-applicability):
+
+* **Mamba**: selective SSM; prefill/train uses a `lax.scan` over time with an
+  O(d_inner * d_state) carry (HLO stays O(1) in sequence length), decode is a
+  single-step state update.  This is the TPU-idiomatic replacement for the
+  CUDA selective-scan kernel.
+* **mLSTM**: matrix-memory LSTM implemented in the *chunkwise-parallel* form
+  of gated linear attention (intra-chunk attention-like block + inter-chunk
+  state carry), which keeps the training backward pass O(S * d) instead of
+  materialising per-step outer products.  q/k use diagonal (per-channel)
+  transforms to match the published parameter budget.
+* **sLSTM**: scalar-memory LSTM with block-diagonal (per-head) recurrence;
+  inherently sequential -> `lax.scan` over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+# =============================================================================
+# Mamba
+# =============================================================================
+
+def mamba_params(key, cfg, dtype) -> dict:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    dt_rank = max(di // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, di), dtype, scale=0.5),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * ds), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype),
+    }
+
+
+def _mamba_dbc(p, xin, cfg):
+    """delta (B,S,di), Bmat/Cmat (B,S,ds) from the conv output."""
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xin @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + cfg.d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"]).astype(jnp.float32)
+    return delta, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv over time.  x: (B,S,di); w: (K,di).
+    ``state``: (B, K-1, di) previous inputs (decode) or None (zero-pad)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+K-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out, new_state
+
+
+def mamba_forward(p: dict, x: jax.Array, cfg):
+    """Full-sequence selective scan.  x: (B,S,d) -> (y, final_state)."""
+    B, S, d = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = _causal_conv(xin, p["conv_w"])
+    xin = jax.nn.silu(xin)
+    delta, Bm, Cm = _mamba_dbc(p, xin, cfg)
+    A = -jnp.exp(p["A_log"])                                # (di, ds)
+    xf = xin.astype(jnp.float32)
+
+    def step(h, t):
+        dt_t, B_t, C_t, x_t = t                              # (B,di) (B,ds) ..
+        da = jnp.exp(dt_t[..., None] * A)                    # (B, di, ds)
+        db = dt_t[..., None] * B_t[:, None, :]               # (B, di, ds)
+        h = da * h + db * x_t[..., None]
+        y = (h * C_t[:, None, :]).sum(-1)                    # (B, di)
+        return h, y
+
+    # two-level scan: the outer carry (one (B,di,ds) state per chunk) is all
+    # autodiff saves; each chunk's inner steps are rematerialised in the
+    # backward pass — without this, the per-step (B,di,ds) discretisations
+    # would be stashed for all S steps.
+    L = S
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if S % cand == 0:
+            L = cand
+            break
+
+    @jax.checkpoint
+    def chunk_body(h, ts_chunk):
+        return jax.lax.scan(step, h, ts_chunk)
+
+    def split(a):   # (B,S,...) -> (n, L, B, ...)
+        return jnp.moveaxis(a, 1, 0).reshape(S // L, L, *a.shape[:1],
+                                             *a.shape[2:])
+
+    ts = tuple(split(a) for a in (delta, Bm, Cm, xf))
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h, ys = jax.lax.scan(chunk_body, h0, ts)
+    y = jnp.moveaxis(ys.reshape(S, B, di), 0, 1) + xf * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, {"conv": conv_state, "h": h}
+
+
+def mamba_decode(p: dict, x: jax.Array, cfg, cache: dict):
+    """Single-token update.  x: (B,1,d)."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin3, conv_state = _causal_conv(xin[:, None], p["conv_w"], cache["conv"])
+    xin = jax.nn.silu(xin3[:, 0])
+    delta, Bm, Cm = _mamba_dbc(p, xin[:, None], cfg)
+    delta, Bm, Cm = delta[:, 0], Bm[:, 0], Cm[:, 0]
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(delta[..., None] * A)
+    db = delta[..., None] * Bm[:, None, :]
+    h = da * cache["h"] + db * xin.astype(jnp.float32)[..., None]
+    y = (h * Cm[:, None, :]).sum(-1) + xin.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y[:, None], {"conv": conv_state, "h": h}
+
+
+def mamba_cache(B, cfg, dtype) -> dict:
+    return {"conv": jnp.zeros((B, cfg.d_conv - 1, cfg.d_inner), dtype),
+            "h": jnp.zeros((B, cfg.d_inner, cfg.d_state), jnp.float32)}
+
+
+# =============================================================================
+# mLSTM — chunkwise-parallel gated linear attention
+# =============================================================================
+
+MLSTM_CHUNK = 64
+
+
+def mlstm_params(key, cfg, dtype) -> dict:
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "wq": jnp.ones((di,), dtype), "wk": jnp.ones((di,), dtype),
+        "gate_proj": dense_init(ks[1], (d, 2 * H), jnp.float32, scale=0.02),
+        "gate_bias": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]
+                                     ).astype(jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _mlstm_qkv_gates(p, x, cfg):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dh = cfg.d_inner // H
+    xm, z = jnp.split(x @ p["in_proj"], 2, axis=-1)
+    q = (xm * p["wq"]).reshape(B, S, H, dh)
+    k = (xm * p["wk"]).reshape(B, S, H, dh) * dh ** -0.5
+    v = xm.reshape(B, S, H, dh)
+    gates = x.astype(jnp.float32) @ p["gate_proj"] + p["gate_bias"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)            # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_gate)
+    i_gate = jnp.exp(jax.nn.log_sigmoid(i_gate))             # in (0,1), stable
+    return q, k, v, i_gate, log_f, z
+
+
+def mlstm_forward(p: dict, x: jax.Array, cfg):
+    """Chunkwise-parallel form.  x: (B,S,d) -> (y, state)."""
+    B, S, d = x.shape
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    L = min(MLSTM_CHUNK, S)
+    assert S % L == 0
+    n = S // L
+    q, k, v, ig, lf, z = _mlstm_qkv_gates(p, x, cfg)
+
+    @jax.checkpoint
+    def chunk(carry, xs):
+        C, nrm = carry                                       # (B,H,dh,dh) (B,H,dh)
+        qc, kc, vc, ic, lfc = xs                             # (B,L,H,*) ...
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        F = jnp.cumsum(lfc, axis=1)                          # (B,L,H)
+        Ftot = F[:, -1]                                      # (B,H)
+        # intra-chunk: decay(t,s) = exp(F_t - F_s) for s <= t
+        dmat = F[:, :, None, :] - F[:, None, :, :]           # (B,L,L,H)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(dmat), 0.0)
+        s = jnp.einsum("blhd,bmhd->blmh", qf, kf) * decay \
+            * ic[:, None, :, :]                              # (B,L,L,H)
+        y_intra = jnp.einsum("blmh,bmhd->blhd", s, vf)
+        # inter-chunk: q_t reads the carried state, decayed by exp(F_t)
+        y_inter = jnp.einsum("blhd,bhde->blhe", qf * jnp.exp(F)[..., None], C)
+        nrm_t = (jnp.einsum("blhd,bhd->blh", qf * jnp.exp(F)[..., None], nrm)
+                 + s.sum(2))                                 # (B,L,H)
+        y = (y_intra + y_inter) / jnp.maximum(
+            jnp.abs(nrm_t)[..., None], 1.0)
+        # state update: C' = exp(Ftot) C + sum_s exp(Ftot - F_s) i_s k_s v_s^T
+        w = jnp.exp(Ftot[:, None] - F) * ic                  # (B,L,H)
+        C_new = jnp.exp(Ftot)[..., None, None] * C + jnp.einsum(
+            "blhd,blhe->bhde", kf * w[..., None], vf)
+        nrm_new = jnp.exp(Ftot)[..., None] * nrm + (kf * w[..., None]).sum(1)
+        return (C_new, nrm_new), y
+
+    def split_chunks(a):
+        return jnp.moveaxis(a.reshape(B, n, L, *a.shape[2:]), 1, 0)
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    xs = tuple(split_chunks(a) for a in (q, k, v, ig, lf))
+
+    # sqrt(n) checkpointing over chunks: the (B,H,dh,dh) matrix state is
+    # the dominant residual (dh can be 1024), so saving it per-chunk for
+    # the backward pass is O(n) copies; a two-level scan saves only
+    # O(sqrt(n)) outer carries and rematerialises the inner ones.
+    n1 = 1
+    for cand in range(int(n ** 0.5), 0, -1):
+        if n % cand == 0:
+            n1 = cand
+            break
+    n2 = n // n1
+
+    @jax.checkpoint
+    def outer(carry, xs_outer):
+        return jax.lax.scan(chunk, carry, xs_outer)
+
+    xs2 = jax.tree.map(lambda a: a.reshape(n1, n2, *a.shape[1:]), xs)
+    (C, nrm), ys = jax.lax.scan(outer, (C0, n0), xs2)
+    ys = ys.reshape(n, *ys.shape[2:])
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return y, {"C": C, "n": nrm}
+
+
+def mlstm_decode(p: dict, x: jax.Array, cfg, cache: dict):
+    B = x.shape[0]
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    q, k, v, ig, lf, z = _mlstm_qkv_gates(p, x, cfg)
+    qf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (q, k, v))
+    f = jnp.exp(lf[:, 0])                                    # (B,H)
+    i = ig[:, 0]
+    C = f[..., None, None] * cache["C"] + i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf)
+    nrm = f[..., None] * cache["n"] + i[..., None] * kf
+    y = jnp.einsum("bhd,bhde->bhe", qf, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, nrm)), 1.0)
+    y = (y / denom[..., None]).reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return y, {"C": C, "n": nrm}
+
+
+def mlstm_cache(B, cfg, dtype) -> dict:
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    return {"C": jnp.zeros((B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, H, dh), jnp.float32)}
+
+
+# =============================================================================
+# sLSTM — scalar memory, block-diagonal recurrence, sequential scan
+# =============================================================================
+
+def slstm_params(key, cfg, dtype) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype),
+        "r": dense_init(ks[1], (H, dh, 4 * dh), dtype, scale=0.3 / dh ** 0.5),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _slstm_step(p, cfg, carry, zx):
+    """One timestep of the stabilised sLSTM.  zx: (B, 4d) input projection."""
+    h, c, n, m = carry                                        # (B,d) each
+    B, d = h.shape
+    H = cfg.n_heads
+    dh = d // H
+    rec = jnp.einsum("bhx,hxy->bhy", h.reshape(B, H, dh).astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(B, 4 * d)
+    g = zx.astype(jnp.float32) + rec + p["bias"]
+    zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    log_i, log_f = ii, jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + m, log_i)                     # stabiliser
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * zt
+    n_new = f_s * n + i_s
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(p: dict, x: jax.Array, cfg):
+    B, S, d = x.shape
+    zx = x @ p["w_in"]                                        # (B,S,4d)
+
+    def step(carry, z_t):
+        new = _slstm_step(p, cfg, carry, z_t)
+        return new, new[0]
+
+    L = next(c for c in (128, 64, 32, 16, 8, 4, 2, 1) if S % c == 0)
+
+    @jax.checkpoint
+    def chunk_body(carry, z_chunk):
+        return jax.lax.scan(step, carry, z_chunk)
+
+    zc = jnp.moveaxis(zx, 1, 0).reshape(S // L, L, B, 4 * d)
+    init = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    carry, hs = jax.lax.scan(chunk_body, init, zc)
+    y = jnp.moveaxis(hs.reshape(S, B, d), 0, 1).astype(x.dtype) @ p["out_proj"]
+    return y, {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+
+
+def slstm_decode(p: dict, x: jax.Array, cfg, cache: dict):
+    zx = x[:, 0] @ p["w_in"]
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_step(p, cfg, carry, zx)
+    y = h[:, None].astype(x.dtype) @ p["out_proj"]
+    return y, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_cache(B, cfg, dtype) -> dict:
+    d = cfg.d_model
+    return {k: jnp.zeros((B, d), jnp.float32) for k in ("h", "c", "n", "m")}

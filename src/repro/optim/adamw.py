@@ -1,0 +1,121 @@
+"""AdamW with optionally block-quantised (int8) moment states.
+
+The quantised variant is the runtime-level twin of the paper's weight
+fragmentation: optimizer moments are the largest training-time residents
+(2 x fp32 per parameter), and storing them in a compressed format — int8
+mantissas with a per-row fp32 scale, the same shape of trick as the paper's
+BFP8 §V-A format — frees the "on-chip" (HBM) budget exactly like moving the
+dynamic weight region off-chip.  For grok-1-314b on a 256-chip pod this is
+the difference between fitting and not fitting (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_states: bool = False     # int8 m/v with per-row scales
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# -- int8 row-quantised storage ------------------------------------------------
+
+def _q8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantise along the last axis: int8 payload + fp32 row scale."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> dict:
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
+    if not cfg.quantize_states:
+        return {"m": jax.tree.map(zeros_like_f32, params),
+                "v": jax.tree.map(zeros_like_f32, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def qzeros(p):
+        return {"q": jnp.zeros(p.shape, jnp.int8),
+                "s": jnp.zeros(p.shape[:-1] + (1,), jnp.float32)}
+
+    return {"m": jax.tree.map(qzeros, params),
+            "v": jax.tree.map(qzeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params: Any, grads: Any, state: dict,
+                 cfg: AdamWConfig) -> tuple[Any, dict, dict]:
+    """One AdamW step.  Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    quant = cfg.quantize_states       # static — structure, not a traced leaf
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _dq8(m["q"], m["s"]) if quant else m
+        v_f = _dq8(v["q"], v["s"]) if quant else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32) - lr * (upd + decay)).astype(p.dtype)
+        if quant:
+            mq, ms = _q8(m_f)
+            vq, vs = _q8(v_f)
+            return new_p, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        return new_p, m_f, v_f
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {"m": treedef.unflatten([o[1] for o in out]),
+                 "v": treedef.unflatten([o[2] for o in out]),
+                 "step": step}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics
+
+
+def opt_state_bytes(state: dict) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))

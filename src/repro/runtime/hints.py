@@ -1,0 +1,78 @@
+"""Activation-sharding hints: mesh-aware constraints without mesh-aware
+models.
+
+The model zoo stays pure (no mesh imports); the step builders activate a
+context during tracing, and layer code calls :func:`constrain` at the
+points where GSPMD propagation is known to fail (q/k/v head axes through
+the RoPE reshape chain, MoE expert/hidden axes).  Outside the context
+``constrain`` is the identity, so smoke tests and the serving engine run
+unchanged on one device.
+
+This module exists because of a §Perf finding: without the head-axis
+constraint, GSPMD replicates all attention computation across the entire
+``model`` axis (16x flops on 32k prefill) — see EXPERIMENTS.md §Perf/H1.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_HINTS: contextvars.ContextVar = contextvars.ContextVar(
+    "smof_sharding_hints", default=None)
+
+
+@contextlib.contextmanager
+def activation_hints(mesh, dp_axes, tp_axis: str = "model"):
+    token = _HINTS.set({"mesh": mesh, "dp": dp_axes, "tp": tp_axis})
+    try:
+        yield
+    finally:
+        _HINTS.reset(token)
+
+
+def active() -> bool:
+    return _HINTS.get() is not None
+
+
+def axis_size(kind: str) -> int:
+    """Mesh extent of the "dp"/"tp" hint axes (1 when no context)."""
+    h = _HINTS.get()
+    if h is None:
+        return 1
+    axes = h[kind] if kind in ("dp", "tp") else None
+    if axes is None:
+        return 1
+    tup = axes if isinstance(axes, tuple) else (axes,)
+    total = 1
+    for a in tup:
+        total *= h["mesh"].shape.get(a, 1)
+    return total
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Apply a sharding constraint; spec entries: "dp" | "tp" | None.
+
+    Divisibility-guarded: any axis that does not divide by its mesh axes is
+    left unsharded instead of failing.
+    """
+    h = _HINTS.get()
+    if h is None:
+        return x
+    mesh = h["mesh"]
+    names = {"dp": h["dp"], "tp": h["tp"]}
+    out = []
+    for dim, s in zip(x.shape, spec):
+        axes = names.get(s) if isinstance(s, str) else None
+        if axes is None:
+            out.append(None)
+            continue
+        tup = axes if isinstance(axes, tuple) else (axes,)
+        total = 1
+        for a in tup:
+            total *= mesh.shape.get(a, 1)
+        out.append(axes if total > 1 and dim % total == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))

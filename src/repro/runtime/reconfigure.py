@@ -1,0 +1,142 @@
+"""Staged subgraph executor — the paper's §III-C reconfiguration on TPU.
+
+An FPGA runs one subgraph's bitstream at a time and pays ``t_ri`` to load
+the next; the TPU analogue keeps only one stage's weights resident and pays
+the host->HBM weight-transfer time between stages.  Latency follows Eq. 5:
+
+    t = sum_i (b * II_i + d_pi) / f + N * t_ri
+
+Boundary activations between stages are the evicted streams: they leave the
+device as BFP8 pages (core/compression) and come back for the next stage —
+Eq. 2's bandwidth cost with the compile-time-known codec ratio.
+
+Stages come from an :class:`ExecutionPlan` (the DSE output) or an explicit
+group partition.  Weights for inactive stages live on host as numpy views.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import bfp8_decode, bfp8_encode
+from repro.models import forward, project_logits
+from repro.models.config import ArchConfig
+from repro.models.model import _embed, apply_norm
+
+
+@dataclasses.dataclass
+class StageTiming:
+    stage: int
+    compute_s: float
+    reconfig_s: float
+    boundary_bytes_raw: int
+    boundary_bytes_sent: int
+
+
+def split_group_stages(n_groups: int, n_stages: int) -> list[tuple[int, int]]:
+    """Contiguous [start, end) group ranges, balanced."""
+    n_stages = max(1, min(n_stages, n_groups))
+    base, rem = divmod(n_groups, n_stages)
+    out, s = [], 0
+    for i in range(n_stages):
+        e = s + base + (1 if i < rem else 0)
+        out.append((s, e))
+        s = e
+    return out
+
+
+class StagedExecutor:
+    """Runs a model whose per-stage weights don't fit together on-device."""
+
+    def __init__(self, cfg: ArchConfig, host_params: Any, *,
+                 n_stages: int, compress_boundary: bool = True,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.n_stages = n_stages
+        self.compress = compress_boundary
+        self.dtype = dtype
+        self.stages = split_group_stages(cfg.n_groups, n_stages)
+        # host-side parameter store (numpy; stands in for host DRAM)
+        self.host_params = jax.tree.map(np.asarray, host_params)
+        self.timings: list[StageTiming] = []
+
+    # -- stage weight management ("reconfiguration") ---------------------------
+    def _stage_params(self, stage: int) -> Any:
+        """Slice this stage's group stack and move it to device (t_ri)."""
+        s, e = self.stages[stage]
+        sliced = jax.tree.map(lambda a: a[s:e], self.host_params["groups"])
+        return jax.tree.map(jnp.asarray, sliced)
+
+    def _boundary_roundtrip(self, x: jax.Array) -> tuple[jax.Array, int, int]:
+        """Evict the inter-stage activation off-device and bring it back."""
+        raw = np.asarray(x, np.float32)
+        raw_bytes = raw.size * 2                       # bf16 stream words
+        if not self.compress:
+            return jnp.asarray(raw, x.dtype), raw_bytes, raw_bytes
+        enc = bfp8_encode(raw)
+        sent = enc.mantissas.size + enc.exponents.size
+        back = bfp8_decode(enc).astype(np.float32)
+        return jnp.asarray(back, x.dtype), raw_bytes, sent
+
+    # -- execution ------------------------------------------------------------------
+    def forward_logits(self, tokens: jax.Array, **extras) -> jax.Array:
+        """Full forward over all stages with reconfiguration between them."""
+        params = self.host_params
+        x = _embed(jax.tree.map(jnp.asarray,
+                                {"embed": params["embed"]}),
+                   self.cfg, tokens,
+                   extras.get("patch_embeds"))
+        self.timings.clear()
+        for i in range(self.n_stages):
+            t0 = time.monotonic()
+            gp = self._stage_params(i)                 # "bitstream load"
+            t_rc = time.monotonic() - t0
+
+            t1 = time.monotonic()
+            x = self._run_groups(gp, x)
+            t_cp = time.monotonic() - t1
+
+            raw = sent = 0
+            if i < self.n_stages - 1:
+                x, raw, sent = self._boundary_roundtrip(x)
+            self.timings.append(StageTiming(i, t_cp, t_rc, raw, sent))
+        full = jax.tree.map(jnp.asarray,
+                            {"final_norm": params["final_norm"],
+                             "embed": params["embed"],
+                             **({"lm_head": params["lm_head"]}
+                                if "lm_head" in params else {})})
+        x = apply_norm(self.cfg.norm, x, full["final_norm"])
+        return project_logits(full, self.cfg, x)
+
+    def _run_groups(self, group_params: Any, x: jax.Array) -> jax.Array:
+        from repro.models.model import _apply_layer
+        ng = jax.tree.leaves(group_params)[0].shape[0]
+        pos = jnp.arange(x.shape[1])[None]
+        gs = self.cfg.group_size
+
+        def body(x, gp):
+            for j in range(gs):
+                x, _, _ = _apply_layer(gp[f"pos_{j}"], x, self.cfg, j,
+                                       pos=pos, mode="full")
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, group_params)
+        return x
+
+    # -- Eq. 5 accounting -------------------------------------------------------------
+    def eq5_latency(self, batch: int) -> dict:
+        comp = sum(t.compute_s for t in self.timings)
+        reconf = sum(t.reconfig_s for t in self.timings)
+        raw = sum(t.boundary_bytes_raw for t in self.timings)
+        sent = sum(t.boundary_bytes_sent for t in self.timings)
+        total = comp + reconf
+        return {"n_stages": self.n_stages, "compute_s": comp,
+                "reconfig_s": reconf, "total_s": total,
+                "throughput_fps": batch / total if total else float("inf"),
+                "boundary_raw_bytes": raw, "boundary_sent_bytes": sent,
+                "boundary_compression": sent / raw if raw else 1.0}

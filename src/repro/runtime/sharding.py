@@ -1,0 +1,186 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs.
+
+Logical scheme on the (``pod``,) ``data``, ``model`` mesh:
+
+* **FSDP** — parameter matrices shard their d_model-like axis over ``data``;
+* **TP**   — head / hidden axes shard over ``model``;
+* **EP**   — MoE expert axis shards over ``model`` when divisible (olmoe 64e,
+  jamba 16e), otherwise experts stay together and TP falls back to d_ff
+  (grok 8e on a 16-wide model axis);
+* **DP**   — the batch shards over (``pod`` x) ``data``;
+* **SP**   — when the batch is too small to shard (long_500k, B=1), the KV
+  cache shards its *sequence* axis over ``data`` instead.
+
+Every rule is divisibility-guarded: an axis that does not divide by its mesh
+axis size is left unsharded rather than failing (e.g. whisper's vocab 51866).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel mesh axes: ("pod","data") on multi-pod meshes."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= _axsize(mesh, a)
+    return out
+
+
+def _guard(shape: tuple, spec: list, mesh: Mesh) -> P:
+    """Drop any sharding a dimension cannot honour."""
+    out = []
+    for dim, s in zip(shape, spec):
+        if s is None:
+            out.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        total = 1
+        for n in names:
+            total *= _axsize(mesh, n)
+        out.append(s if dim % total == 0 and total > 1 else None)
+    return P(*out)
+
+
+def _param_spec(path: tuple, shape: tuple, cfg: ArchConfig, mesh: Mesh) -> P:
+    names = [getattr(k, "key", str(k)) for k in path]
+    name = names[-1]
+    grouped = "groups" in names            # stacked (n_groups, ...) leading dim
+    core = shape[1:] if grouped else shape
+
+    def done(spec_core: list) -> P:
+        spec = ([None] + spec_core) if grouped else spec_core
+        return _guard(shape, spec, mesh)
+
+    if name in ("embed", "lm_head"):
+        return done(["model", None])
+    # --- attention -----------------------------------------------------------
+    if name in ("wq", "wk", "wv"):
+        return done(["data", "model"])
+    if name == "wo":
+        return done(["model", "data"])
+    # --- ffn / moe ------------------------------------------------------------
+    if name == "router":
+        return done(["data", None])
+    if name in ("w_up", "w_gate", "w_down") and len(core) == 3:   # (E, d, f)
+        E = core[0]
+        if E % _axsize(mesh, "model") == 0:
+            return done(["model", "data", None] if name != "w_down"
+                        else ["model", None, "data"])
+        return done([None, "data", "model"] if name != "w_down"
+                    else [None, "model", "data"])
+    if name in ("w_up", "w_gate"):
+        return done(["data", "model"])
+    if name == "w_down":
+        return done(["model", "data"])
+    # --- ssm / xlstm -----------------------------------------------------------
+    if name == "in_proj":
+        return done(["data", "model"])
+    if name == "out_proj":
+        return done(["model", "data"])
+    if name in ("conv_w",):
+        return done([None, "model"])
+    if name == "x_proj":
+        return done(["model", None])
+    if name == "dt_proj":
+        return done([None, "model"])
+    if name in ("A_log",):
+        return done(["model", None])
+    if name in ("D", "wq_diag", "wk_diag"):
+        return done(["model"])
+    if name == "w_in":
+        return done(["data", "model"])
+    if name == "r":                         # (H, dh, 4dh)
+        return done([None, None, "model"])
+    # --- norms / biases / everything 1-D: replicate -----------------------------
+    if len(core) <= 1:
+        return done([None] * len(core))
+    # generic 2-D fallback
+    return done(["data", "model"] + [None] * (len(core) - 2))
+
+
+def param_shardings(cfg: ArchConfig, params_shapes: Any, mesh: Mesh) -> Any:
+    """NamedSharding pytree matching a params (shape) pytree."""
+    def f(path, leaf):
+        spec = _param_spec(path, leaf.shape, cfg, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+def opt_state_shardings(cfg: ArchConfig, opt_shapes: Any, mesh: Mesh) -> Any:
+    """Moments follow their parameter's sharding; scales drop the last axis."""
+    def f(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        if names and names[-1] == "step":
+            return NamedSharding(mesh, P())
+        # strip the m/v level and any q/s quantisation leaf so the rule sees
+        # the underlying parameter's path
+        eff = tuple(k for k in path
+                    if getattr(k, "key", str(k)) not in ("m", "v", "q", "s"))
+        if names[-1] == "s":   # row scale: parameter spec minus the last axis
+            fake = leaf.shape[:-1] + (mesh.size * 1024,)
+            base = _param_spec(eff, fake, cfg, mesh)
+            spec = _guard(leaf.shape, list(base)[:-1] + [None], mesh)
+        else:
+            spec = _param_spec(eff, leaf.shape, cfg, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, opt_shapes)
+
+
+def batch_shardings(cfg: ArchConfig, batch: int, mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+    b_ok = batch % dp_size(mesh) == 0
+    row = (dp,) if b_ok else (None,)
+    return {
+        "tokens": NamedSharding(mesh, P(*row, None)),
+        "labels": NamedSharding(mesh, P(*row, None)),
+        "enc_frames": NamedSharding(mesh, P(*row, None, None)),
+        "patch_embeds": NamedSharding(mesh, P(*row, None, None)),
+        "pos": NamedSharding(mesh, P(*row)),
+    }
+
+
+def cache_shardings(cfg: ArchConfig, batch: int, mesh: Mesh, cache_shapes) -> Any:
+    """KV / state cache shardings; SP fallback when the batch won't shard."""
+    dp = dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+    b_ok = batch % dp_size(mesh) == 0
+
+    def f(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        name = names[-1]
+        nd = len(leaf.shape)
+        spec: list = [None] * nd
+        if name in ("k", "v", "xk", "xv") and nd == 5:
+            # KV cache (ng, B, S, KH, D): batch over DP + *sequence over
+            # model* — GSPMD turns decode attention into ring-attention-lite
+            # (sharded partial scores + collective softmax), and a KH head
+            # axis smaller than the model axis never forces a replica.
+            if b_ok:
+                spec[1] = dp
+            spec[2] = "model" if b_ok else ("data", "model")
+        elif b_ok:
+            spec[1] = dp                                   # (ng, B, ...)
+        elif name in ("h", "C") and nd >= 4:
+            spec[2] = "model"                              # d_inner / heads
+        return NamedSharding(mesh, _guard(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,216 @@
+"""Jitted train / prefill / decode step builders.
+
+These are the units the dry-run lowers and the launcher executes.  All of
+them take parameters (and caches) as explicit pytree arguments with
+NamedShardings, so ``.lower()`` works on pure ShapeDtypeStructs — nothing is
+allocated for the 40-cell x 2-mesh dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import (decode_step as _decode, forward, init_cache,
+                          init_params, lm_loss, project_logits)
+from repro.models.config import ArchConfig
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from . import sharding as SH
+from .hints import activation_hints
+
+
+def _with_hints(fn, mesh):
+    """Trace ``fn`` under activation-sharding hints (§Perf/H1)."""
+    dp = SH.dp_axes(mesh)
+    dp = dp[0] if len(dp) == 1 else dp
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        with activation_hints(mesh, dp, "model"):
+            return fn(*args, **kw)
+    return wrapped
+
+
+# -- abstract shapes (no allocation) -------------------------------------------
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                       dtype=jnp.bfloat16):
+    p = abstract_params(cfg, dtype)
+    return jax.eval_shape(lambda q: init_opt_state(q, opt_cfg), p)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, s_max: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, s_max, dtype=dtype))
+
+
+# -- step functions -------------------------------------------------------------
+
+def auto_microbatches(batch: int, mesh: Mesh, rows_per_device: int = 1) -> int:
+    """Accumulation depth that keeps ~rows_per_device sequences live per
+    device (bounds activation temps; the optimizer update stays one step)."""
+    dp = SH.dp_size(mesh)
+    mb = max(1, batch // (dp * rows_per_device))
+    while batch % mb:
+        mb -= 1
+    return mb
+
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh, opt_cfg: AdamWConfig,
+                    remat: str = "full", dtype=jnp.bfloat16,
+                    microbatches: int | None = None, batch_size: int = 0):
+    """Returns (jitted_fn, in_shardings, donate) for
+    fn(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation: the global batch is split into ``microbatches``
+    slices scanned sequentially; activation memory scales with the slice
+    while the parameter update sees the full batch."""
+
+    def loss_fn(p, mb):
+        return lm_loss(p, cfg, mb["tokens"], mb["labels"],
+                       enc_frames=mb.get("enc_frames"),
+                       patch_embeds=mb.get("patch_embeds"),
+                       remat=remat)
+
+    # fp32 accumulation by default; bf16 when the optimizer states are
+    # already int8-quantised (grok-class models, where the fp32 accumulator
+    # alone is ~5 GB/device) — the same precision class as compressed
+    # cross-pod gradient exchange.
+    acc_dtype = jnp.bfloat16 if opt_cfg.quantize_states else jnp.float32
+    grad_sh = SH.param_shardings(cfg, abstract_params(cfg, dtype), mesh)
+
+    def step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        mbs = microbatches or auto_microbatches(B, mesh)
+        if mbs <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape(mbs, B // mbs, *x.shape[1:]), batch)
+
+            def mb_body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), acc, g)
+                # pin the accumulator to the parameter layout: FSDP grads
+                # then reduce-SCATTER per microbatch instead of all-reduce
+                # (§Perf/H4 — 1/dp the bytes on the data axis)
+                acc = jax.tree.map(
+                    lambda a, s: jax.lax.with_sharding_constraint(a, s),
+                    acc, grad_sh)
+                return acc, l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            grads, losses = jax.lax.scan(mb_body, zeros, split)
+            grads = jax.tree.map(lambda g: g / mbs, grads)
+            loss = losses.mean()
+        new_p, new_opt, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_p, new_opt, metrics
+
+    step = _with_hints(step, mesh)
+    p_sh = SH.param_shardings(cfg, abstract_params(cfg, dtype), mesh)
+    o_sh = SH.opt_state_shardings(
+        cfg, abstract_opt_state(cfg, opt_cfg, dtype), mesh)
+    return step, (p_sh, o_sh), (0, 1)
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, batch: int, seq: int,
+                      dtype=jnp.bfloat16):
+    """fn(params, cache, batch) -> (last_logits, cache)."""
+
+    def step(params, cache, batch_in):
+        x, new_cache, _ = forward(
+            params, cfg, batch_in["tokens"], cache=cache,
+            enc_frames=batch_in.get("enc_frames"),
+            patch_embeds=batch_in.get("patch_embeds"))
+        logits = project_logits(params, cfg, x[:, -1])
+        return logits, new_cache
+
+    step = _with_hints(step, mesh)
+    p_sh = SH.param_shardings(cfg, abstract_params(cfg, dtype), mesh)
+    c_sh = SH.cache_shardings(cfg, batch, mesh,
+                              abstract_cache(cfg, batch, seq, dtype))
+    return step, (p_sh, c_sh), (1,)
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh, batch: int, s_max: int,
+                     dtype=jnp.bfloat16):
+    """fn(params, cache, token, pos) -> (logits, cache).  One new token
+    against a KV/state cache of length s_max (the ``decode_*`` shapes)."""
+
+    def step(params, cache, token, pos):
+        return _decode(params, cfg, token, pos, cache)
+
+    step = _with_hints(step, mesh)
+    p_sh = SH.param_shardings(cfg, abstract_params(cfg, dtype), mesh)
+    c_sh = SH.cache_shardings(cfg, batch, mesh,
+                              abstract_cache(cfg, batch, s_max, dtype))
+    return step, (p_sh, c_sh), (1,)
+
+
+# -- input specs (the dry-run contract) ------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape, mesh: Mesh, *,
+                opt_cfg: AdamWConfig | None = None,
+                dtype=jnp.bfloat16) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the step that ``shape``
+    lowers (train_step for ``train``, prefill/decode otherwise) — weak-type
+    correct, sharded, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    bsh = SH.batch_shardings(cfg, B, mesh)
+    i32 = jnp.int32
+
+    def tok(b, s, sh):
+        return jax.ShapeDtypeStruct((b, s), i32, sharding=sh)
+
+    p_abs = abstract_params(cfg, dtype)
+    p_sh = SH.param_shardings(cfg, p_abs, mesh)
+    params = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        p_abs, p_sh)
+
+    extras = {}
+    if cfg.is_encdec:
+        extras["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), dtype,
+            sharding=bsh["enc_frames"])
+    if cfg.vlm_patches and shape.kind != "decode":
+        extras["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vlm_patches, cfg.d_model), dtype,
+            sharding=bsh["patch_embeds"])
+
+    if shape.kind == "train":
+        o_abs = abstract_opt_state(cfg, opt_cfg or AdamWConfig(), dtype)
+        o_sh = SH.opt_state_shardings(cfg, o_abs, mesh)
+        opt = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            o_abs, o_sh)
+        batch = {"tokens": tok(B, S, bsh["tokens"]),
+                 "labels": tok(B, S, bsh["labels"]), **extras}
+        return {"params": params, "opt_state": opt, "batch": batch}
+
+    c_abs = abstract_cache(cfg, B, S, dtype)
+    c_sh = SH.cache_shardings(cfg, B, mesh, c_abs)
+    cache = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        c_abs, c_sh)
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(B, S, bsh["tokens"]), **extras}
+        return {"params": params, "cache": cache, "batch": batch}
+
+    # decode: one new token with a cache of length S
+    return {"params": params, "cache": cache,
+            "token": tok(B, 1, bsh["tokens"]),
+            "pos": jax.ShapeDtypeStruct((B,), i32, sharding=bsh["pos"])}

@@ -1,0 +1,170 @@
+"""Batched serving engine with continuous batching and SMOF cache eviction.
+
+SMOF is an inference toolflow, so this is the system's end-to-end driver:
+requests enter a queue, get packed into fixed decode slots (continuous
+batching — a finished request's slot is immediately refilled), prefill runs
+per-request, and decode advances all active slots in lockstep.
+
+The paper's activation eviction shows up here as **KV-page eviction**: when
+a slot's cache page goes cold (its request finished) or the configured
+budget is exceeded, pages are evicted to the host in BFP8 (the §V-A codec)
+and restored on demand — Eq. 1/2's on-chip <-> off-chip trade with HBM as
+"on-chip" and host DRAM as "off-chip".
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import bfp8_decode, bfp8_encode
+from repro.models import decode_step, forward, init_cache, project_logits
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new_tokens: int = 16
+    eos: int | None = None
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    generated: int = 0
+    evicted_pages: int = 0
+    restored_pages: int = 0
+    evicted_bytes_raw: int = 0
+    evicted_bytes_compressed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
+                 s_max: int = 256, dtype=jnp.float32,
+                 evict_to_host: bool = False,
+                 sampler: Callable | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.B = max_batch
+        self.s_max = s_max
+        self.dtype = dtype
+        self.evict_to_host = evict_to_host
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self.cache = init_cache(cfg, max_batch, s_max, dtype=dtype)
+        self.slots: list[Request | None] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.stats = EngineStats()
+        self.host_store: dict[int, dict] = {}    # rid -> evicted pages
+        self._next_rid = 0
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, t, pos, c))
+
+    # -- request intake ------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos: int | None = None) -> Request:
+        r = Request(rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
+                    max_new_tokens=max_new_tokens, eos=eos)
+        self._next_rid += 1
+        self.queue.put(r)
+        return r
+
+    # -- slot management -------------------------------------------------------------
+    def _fill_slots(self) -> None:
+        for b in range(self.B):
+            if self.slots[b] is None and not self.queue.empty():
+                r = self.queue.get()
+                self._prefill(b, r)
+                self.slots[b] = r
+
+    def _prefill(self, slot: int, r: Request) -> None:
+        """Run the prompt through the full forward, writing slot ``slot``."""
+        S = len(r.prompt)
+        assert S < self.s_max, (S, self.s_max)
+        toks = jnp.asarray(r.prompt, jnp.int32)[None]
+        one_cache = init_cache(self.cfg, 1, self.s_max, dtype=self.dtype)
+        x, new_cache, _ = forward(self.params, self.cfg, toks,
+                                  cache=one_cache)
+        logits = project_logits(self.params, self.cfg, x[:, -1])
+        first = int(np.asarray(self.sampler(logits))[0])
+        r.out_tokens.append(first)
+        self.cache = jax.tree.map(
+            lambda c, n: c.at[:, slot].set(n[:, 0]), self.cache, new_cache)
+        self.pos[slot] = S
+        self.stats.prefills += 1
+
+    def _retire(self, slot: int) -> None:
+        r = self.slots[slot]
+        if r is not None and self.evict_to_host:
+            self._evict_slot(slot, r.rid)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+
+    # -- KV eviction (paper Eq. 1/2 at the HBM<->host level) -------------------------
+    def _evict_slot(self, slot: int, rid: int) -> None:
+        pages = {}
+
+        def evict_leaf(path, c):
+            name = "/".join(str(getattr(p, "key", p)) for p in path)
+            page = np.asarray(c[:, slot], np.float32)
+            enc = bfp8_encode(page)
+            self.stats.evicted_bytes_raw += page.size * 2      # bf16 words
+            self.stats.evicted_bytes_compressed += (
+                enc.mantissas.size + enc.exponents.size)
+            pages[name] = enc
+            return c
+        jax.tree_util.tree_map_with_path(evict_leaf, self.cache)
+        self.host_store[rid] = pages
+        self.stats.evicted_pages += len(pages)
+
+    def restore_request(self, rid: int, slot: int) -> None:
+        """Bring an evicted request's pages back into HBM (resumption)."""
+        pages = self.host_store.pop(rid)
+        flat = {}
+        def restore_leaf(path, c):
+            name = "/".join(str(getattr(p, "key", p)) for p in path)
+            page = bfp8_decode(pages[name]).astype(np.asarray(c).dtype)
+            self.stats.restored_pages += 1
+            return c.at[:, slot].set(jnp.asarray(page))
+        self.cache = jax.tree_util.tree_map_with_path(restore_leaf, self.cache)
+
+    # -- decode loop ---------------------------------------------------------------
+    def step(self) -> int:
+        """One lockstep decode step over all active slots; returns #active."""
+        self._fill_slots()
+        active = [b for b, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        last = np.zeros((self.B, 1), np.int32)
+        for b in active:
+            last[b, 0] = self.slots[b].out_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(last),
+            jnp.asarray(self.pos, jnp.int32))
+        nxt = np.asarray(self.sampler(logits))
+        self.stats.decode_steps += 1
+        for b in active:
+            r = self.slots[b]
+            self.pos[b] += 1
+            r.out_tokens.append(int(nxt[b]))
+            self.stats.generated += 1
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or (r.eos is not None and int(nxt[b]) == r.eos)
+                    or self.pos[b] >= self.s_max - 1):
+                r.done = True
+                self._retire(b)
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and self.queue.empty():
+                return

@@ -1,0 +1,125 @@
+"""Codec tests: RLE / Huffman round-trips, BFP8 accuracy, ratio estimators.
+Property-based (hypothesis) where the invariant is exact reconstruction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+class TestRLE:
+    def test_roundtrip_simple(self):
+        x = np.array([0, 0, 0, 5, 5, 1, 0, 0], dtype=np.int32)
+        vals, runs = C.rle_encode(x)
+        np.testing.assert_array_equal(C.rle_decode(vals, runs), x)
+
+    @given(st.lists(st.integers(-128, 127), min_size=0, max_size=500))
+    @settings(max_examples=60, deadline=None)
+    def test_roundtrip_property(self, xs):
+        x = np.asarray(xs, dtype=np.int32)
+        vals, runs = C.rle_encode(x)
+        np.testing.assert_array_equal(C.rle_decode(vals, runs), x)
+
+    def test_max_run_respected(self):
+        x = np.zeros(1000, dtype=np.int32)
+        vals, runs = C.rle_encode(x, max_run=256)
+        assert runs.max() <= 256
+        np.testing.assert_array_equal(C.rle_decode(vals, runs), x)
+
+    def test_sparse_compresses_dense_does_not(self):
+        rng = np.random.default_rng(0)
+        sparse = np.where(rng.random(4096) < 0.8, 0, rng.integers(1, 100, 4096))
+        dense = rng.integers(-100, 100, 4096)
+        assert C.rle_ratio(sparse, 8) < 1.0
+        assert C.rle_ratio(dense, 8) > 1.0   # RLE hurts incompressible data
+
+
+class TestHuffman:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(1)
+        x = rng.choice([0, 0, 0, 0, 1, 2, 3], size=200)
+        code = C.huffman_build(dict(zip(*np.unique(x, return_counts=True))))
+        payload, nbits = C.huffman_encode(x, code)
+        out = C.huffman_decode(payload, nbits, code)
+        np.testing.assert_array_equal(out, x)
+
+    @given(st.lists(st.integers(0, 15), min_size=1, max_size=300))
+    @settings(max_examples=40, deadline=None)
+    def test_roundtrip_property(self, xs):
+        x = np.asarray(xs)
+        syms, counts = np.unique(x, return_counts=True)
+        code = C.huffman_build(dict(zip(syms.tolist(), counts.tolist())))
+        payload, nbits = C.huffman_encode(x, code)
+        np.testing.assert_array_equal(C.huffman_decode(payload, nbits, code), x)
+
+    def test_skewed_beats_uniform(self):
+        rng = np.random.default_rng(2)
+        skewed = rng.choice(16, p=[0.7] + [0.02] * 15, size=4096)
+        uniform = rng.integers(0, 16, 4096)
+        assert C.huffman_ratio(skewed, 8) < C.huffman_ratio(uniform, 8)
+
+    def test_kraft_inequality(self):
+        rng = np.random.default_rng(3)
+        x = rng.integers(0, 64, 1000)
+        syms, counts = np.unique(x, return_counts=True)
+        code = C.huffman_build(dict(zip(syms.tolist(), counts.tolist())))
+        kraft = sum(2.0 ** -ln for ln in code.lengths.values())
+        assert kraft == pytest.approx(1.0)
+
+    def test_prefix_free(self):
+        rng = np.random.default_rng(4)
+        x = rng.integers(0, 32, 500)
+        syms, counts = np.unique(x, return_counts=True)
+        code = C.huffman_build(dict(zip(syms.tolist(), counts.tolist())))
+        bits = {format(c, f"0{l}b") for c, l in code.codes.values()}
+        for a in bits:
+            for b in bits:
+                assert a == b or not b.startswith(a)
+
+
+class TestBFP8:
+    @given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                    min_size=1, max_size=300))
+    @settings(max_examples=40, deadline=None)
+    def test_relative_error_bounded(self, xs):
+        x = np.asarray(xs, dtype=np.float32)
+        out = C.bfp8_decode(C.bfp8_encode(x, block=32))
+        assert out.shape == x.shape
+        # error bounded by half an lsb of the block scale
+        blocks = np.pad(x, (0, (-x.size) % 32)).reshape(-1, 32)
+        scales = 2.0 ** (np.ceil(np.log2(np.maximum(np.abs(blocks).max(1), 1e-38))) - 6)
+        err = np.abs(np.pad(x, (0, (-x.size) % 32)).reshape(-1, 32) -
+                     np.pad(out, (0, (-out.size) % 32)).reshape(-1, 32))
+        assert (err <= scales[:, None] * 0.5 + 1e-30).all()
+
+    def test_zeros_exact(self):
+        x = np.zeros(100, dtype=np.float32)
+        np.testing.assert_array_equal(C.bfp8_decode(C.bfp8_encode(x)), x)
+
+    def test_shape_preserved(self):
+        x = np.random.default_rng(5).normal(size=(7, 13)).astype(np.float32)
+        assert C.bfp8_decode(C.bfp8_encode(x)).shape == (7, 13)
+
+    def test_ratio_compile_time_known(self):
+        assert C.bfp8_ratio(16, block=32) == pytest.approx((8 + 0.25) / 16)
+        assert C.bfp8_ratio(8, block=32) > 1.0   # pointless on 8-bit words
+
+
+class TestEstimator:
+    def test_none_is_identity(self):
+        assert C.estimate_ratio("none", 8) == 1.0
+
+    def test_rle_improves_with_sparsity(self):
+        lo = C.estimate_ratio("rle", 8, sparsity=0.2)
+        hi = C.estimate_ratio("rle", 8, sparsity=0.9)
+        assert hi < lo
+
+    def test_measured_beats_analytic_on_real_sample(self):
+        rng = np.random.default_rng(6)
+        sample = np.where(rng.random(8192) < 0.7, 0.0, rng.normal(size=8192))
+        measured = C.estimate_ratio("rle", 8, sample=sample)
+        assert 0.0 < measured < 1.2
+
+    def test_unknown_codec_raises(self):
+        with pytest.raises(ValueError):
+            C.estimate_ratio("lzw", 8)

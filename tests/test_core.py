@@ -1,0 +1,202 @@
+"""Unit tests for the SMOF core: graph IR, pipeline-depth model (Eq. 8-11),
+eviction (Eq. 1-2), fragmentation (Eq. 3-4), partitioning (Eq. 5-6)."""
+import math
+
+import pytest
+
+from repro.core import (DSEConfig, Graph, U200, Vertex, ZCU102,
+                        build_unet, candidate_evictions,
+                        candidate_fragmentations, apply_eviction,
+                        apply_fragmentation, evaluate_eviction,
+                        evaluate_fragmentation, initial_partition,
+                        initiation_interval, initiation_rate, interval_prev,
+                        latency_s, merge, Partitioning, pipeline_depth,
+                        subgraph_cost, throughput_fps, vertex_delays)
+from repro.core.eviction import DMA_DELAY_CYCLES, DMA_FIFO_DEPTH
+from repro.core.fragmentation import weight_consumption_rate
+
+
+def chain3() -> Graph:
+    """input -> conv(a) -> conv(b), hand-checkable numbers."""
+    g = Graph("chain3")
+    g.add(Vertex("in", "input", in_words=100, out_words=100, base_depth=1))
+    g.add(Vertex("a", "conv", work_macs=1000, weight_words=50,
+                 in_words=100, out_words=200, base_depth=10, max_par=8))
+    g.add(Vertex("b", "conv", work_macs=4000, weight_words=80,
+                 in_words=200, out_words=100, base_depth=20, max_par=8))
+    g.connect("in", "a")
+    g.connect("a", "b")
+    return g
+
+
+def branchy() -> Graph:
+    """A skip connection: in -> a -> (skip, long: b -> c) -> concat."""
+    g = Graph("branchy")
+    g.add(Vertex("in", "input", in_words=64, out_words=64))
+    g.add(Vertex("a", "conv", work_macs=640, weight_words=16,
+                 in_words=64, out_words=64, base_depth=8, max_par=4))
+    g.add(Vertex("b", "conv", work_macs=64000, weight_words=32,
+                 in_words=64, out_words=64, base_depth=512, max_par=4))
+    g.add(Vertex("c", "conv", work_macs=64000, weight_words=32,
+                 in_words=64, out_words=64, base_depth=512, max_par=4))
+    g.add(Vertex("cat", "concat", in_words=128, out_words=128))
+    g.connect("in", "a")
+    g.connect("a", "b")
+    g.connect("b", "c")
+    g.connect("a", "cat")     # the skip
+    g.connect("c", "cat")
+    return g
+
+
+class TestPipelineModel:
+    def test_interval_prev_is_max_over_ancestors(self):
+        g = chain3()
+        # Eq. 8 for "a": only ancestor is "in": lambda=100, rho=1
+        assert interval_prev(g, "a") == pytest.approx(100 + 1)
+        # for "b": ancestor "a": lambda = max(1000, 200)/1 = 1000, rho = 10
+        assert interval_prev(g, "b") == pytest.approx(1000 + 10)
+
+    def test_initiation_rate(self):
+        g = chain3()
+        # Eq. 9: source vertex uses its standard input rate
+        assert initiation_rate(g, "in") == pytest.approx(100 / 100)
+        # "b": sigma_in / Interval_prev = 200 / 1010
+        assert initiation_rate(g, "b") == pytest.approx(200 / 1010)
+
+    def test_delay_accumulates_along_path(self):
+        g = chain3()
+        d = vertex_delays(g)
+        assert d["in"] < d["a"] < d["b"]
+        # Eq. 10 closed form for the chain
+        r_in = 1.0
+        r_a = 100 / (100 + 1)
+        r_b = 200 / (1000 + 10)
+        expect = 1 / r_in + 10 / r_a + 20 / r_b
+        assert d["b"] == pytest.approx(expect)
+
+    def test_pipeline_depth_is_max_delay(self):
+        g = chain3()
+        assert pipeline_depth(g) == pytest.approx(max(vertex_delays(g).values()))
+
+    def test_parallelism_reduces_ii(self):
+        g = chain3()
+        ii0 = initiation_interval(g)
+        g.vertex("b").par = 8
+        assert initiation_interval(g) < ii0
+
+
+class TestBufferDepths:
+    def test_skip_edge_gets_deep_buffer(self):
+        g = branchy()
+        g.compute_buffer_depths()
+        skip = g.edge("a", "cat")
+        seq = g.edge("a", "b")
+        assert skip.buffer_depth > seq.buffer_depth
+        assert skip.buffer_depth > DMA_DELAY_CYCLES  # evictable
+
+    def test_unet_deepest_buffers_are_the_long_skips(self):
+        g = build_unet()
+        g.compute_buffer_depths()
+        deepest = max(g.edges(), key=lambda e: e.buffer_depth)
+        assert g.vertex(deepest.dst).kind == "concat"
+
+
+class TestEviction:
+    def test_eq1_saving_and_constraint(self):
+        g = branchy()
+        g.compute_buffer_depths()
+        opt = evaluate_eviction(g, "a", "cat")
+        d_b = g.edge("a", "cat").buffer_depth
+        assert opt.delta_depth_words == pytest.approx(d_b - 2 * DMA_FIFO_DEPTH)
+        assert opt.feasible == (d_b > max(2 * DMA_FIFO_DEPTH, DMA_DELAY_CYCLES))
+
+    def test_eq2_bandwidth(self):
+        g = branchy()
+        g.compute_buffer_depths()
+        opt = evaluate_eviction(g, "a", "cat", codec="none", alpha=1.0)
+        r = g.vertex("a").rate_out()
+        assert opt.delta_bw_words_per_cycle == pytest.approx(r * 1.0 * 2.0)
+
+    def test_shallow_edge_not_feasible(self):
+        g = chain3()
+        g.compute_buffer_depths()   # all shallow
+        opts = candidate_evictions(g)
+        assert opts == []           # nothing worth evicting
+
+    def test_apply_eviction_shrinks_buffer(self):
+        g = branchy()
+        g.compute_buffer_depths()
+        before = g.edge("a", "cat").buffer_depth
+        opt = evaluate_eviction(g, "a", "cat")
+        apply_eviction(g, opt)
+        e = g.edge("a", "cat")
+        assert e.evicted and e.buffer_depth == pytest.approx(2 * DMA_FIFO_DEPTH)
+        assert e.buffer_depth < before
+
+
+class TestFragmentation:
+    def test_eq3_eq4(self):
+        g = chain3()
+        v = g.vertex("b")
+        opt = evaluate_fragmentation(g, "b", ratio_step=0.25)
+        assert opt.delta_depth_words == pytest.approx(0.25 * v.weight_words)
+        r = weight_consumption_rate(v)
+        assert opt.delta_bw_words_per_cycle == pytest.approx(0.25 * r * 1.0)
+
+    def test_ratio_saturates_at_one(self):
+        g = chain3()
+        for _ in range(10):
+            opt = evaluate_fragmentation(g, "b", ratio_step=0.3)
+            if opt is None:
+                break
+            apply_fragmentation(g, opt)
+        assert g.vertex("b").frag_ratio == pytest.approx(1.0)
+        assert g.vertex("b").static_weight_bits() == pytest.approx(0.0)
+
+    def test_weightless_vertex_has_no_option(self):
+        g = chain3()
+        assert evaluate_fragmentation(g, "in") is None
+
+    def test_merit_ordering(self):
+        g = chain3()
+        opts = candidate_fragmentations(g)
+        merits = [o.merit for o in opts]
+        assert merits == sorted(merits, reverse=True)
+
+
+class TestPartitioning:
+    def test_initial_partition_is_fine_grained(self):
+        g = build_unet()
+        p = initial_partition(g, cut_kinds=("conv", "pool"))
+        assert p.n > 10
+
+    def test_dependency_violation_rejected(self):
+        g = chain3()
+        with pytest.raises(ValueError):
+            Partitioning(g, [["b"], ["in", "a"]])
+
+    def test_merge_reduces_reconfig_latency(self):
+        g = chain3()
+        g.compute_buffer_depths()
+        p = initial_partition(g, cut_kinds=None)
+        t_before = latency_s(p, U200, batch=1)
+        merged = p
+        while merged.n > 1:
+            merged = merge(merged, 0)
+        t_after = latency_s(merged, U200, batch=1)
+        assert t_after < t_before       # reconfig overhead gone
+
+    def test_eq6_throughput_matches_latency(self):
+        g = chain3()
+        g.compute_buffer_depths()
+        p = initial_partition(g, cut_kinds=None)
+        b = 4
+        assert throughput_fps(p, U200, b) == pytest.approx(
+            b / latency_s(p, U200, b))
+
+    def test_boundary_words(self):
+        g = chain3()
+        p = Partitioning(g, [["in", "a"], ["b"]])
+        w_in, w_out = p.boundary_words(1)
+        assert w_in == pytest.approx(g.vertex("a").out_words)
+        assert w_out == 0.0

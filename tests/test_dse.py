@@ -1,0 +1,143 @@
+"""DSE (Algorithm 1) behaviour + invariants, incl. hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DSEConfig, Graph, U200, Vertex, ZCU102, build_unet,
+                        pack_onchip, plan_from_dse, run_dse, ExecutionPlan)
+from repro.core.dse import _snapshot, _restore
+from repro.core.partition import subgraph_cost, fits
+
+
+def random_chain(seed: int, n: int) -> Graph:
+    rng = np.random.default_rng(seed)
+    g = Graph(f"rand{seed}")
+    g.add(Vertex("in", "input", in_words=256, out_words=256))
+    prev = "in"
+    for i in range(n):
+        v = g.add(Vertex(f"c{i}", "conv",
+                         work_macs=float(rng.integers(10_000, 5_000_000)),
+                         weight_words=float(rng.integers(1_000, 500_000)),
+                         in_words=256, out_words=256,
+                         base_depth=float(rng.integers(1, 2000)),
+                         max_par=64))
+        g.connect(prev, v.name)
+        prev = v.name
+    return g
+
+
+class TestDSE:
+    def test_unet_u200_matches_paper_ballpark(self):
+        """Paper Fig. 4: UNet on U200 = 21 fps, 47 ms, single partition."""
+        res = run_dse(build_unet(), U200,
+                      DSEConfig(batch=1, cut_kinds=("conv", "pool"), word_bits=8))
+        assert res.feasible
+        assert res.partitioning.n == 1
+        assert 14.0 < res.throughput_fps < 28.0
+        assert res.latency_s < 0.08
+
+    def test_small_device_triggers_offchip(self):
+        """ZCU102 cannot hold UNet weights on-chip -> fragmentation/eviction."""
+        res = run_dse(build_unet(), ZCU102,
+                      DSEConfig(batch=1, cut_kinds=("conv", "pool"), word_bits=8))
+        assert res.feasible
+        g = res.partitioning.graph
+        used_offchip = (any(v.frag_ratio > 0 for v in g.vertices())
+                        or any(e.evicted for e in g.edges())
+                        or res.partitioning.n > 1)
+        assert used_offchip
+
+    def test_all_parts_feasible_after_dse(self):
+        cfg = DSEConfig(batch=1, cut_kinds=("conv", "pool"), word_bits=8)
+        res = run_dse(build_unet(), U200, cfg)
+        for i in range(res.partitioning.n):
+            c = subgraph_cost(res.partitioning, i)
+            assert fits(c, U200, word_bits=8)
+
+    def test_disabling_mechanisms_never_improves(self):
+        """Fig. 6's premise: baseline <= eviction/fragmentation-enabled."""
+        g1, g2 = build_unet(), build_unet()
+        cfg_full = DSEConfig(batch=1, cut_kinds=("conv", "pool"), word_bits=8)
+        cfg_base = DSEConfig(batch=1, cut_kinds=("conv", "pool"), word_bits=8,
+                             allow_eviction=False, allow_fragmentation=False)
+        full = run_dse(g1, ZCU102, cfg_full)
+        base = run_dse(g2, ZCU102, cfg_base)
+        assert full.throughput_fps >= base.throughput_fps * 0.999
+
+    @given(st.integers(0, 6), st.integers(2, 8))
+    @settings(max_examples=10, deadline=None)
+    def test_constraints_hold_property(self, seed, n):
+        g = random_chain(seed, n)
+        cfg = DSEConfig(batch=1, word_bits=8)
+        res = run_dse(g, ZCU102, cfg)
+        if res.feasible:
+            for i in range(res.partitioning.n):
+                c = subgraph_cost(res.partitioning, i)
+                assert c.compute_units <= ZCU102.compute_units
+                assert c.bw_words_per_cycle <= ZCU102.words_per_cycle_offchip(8) * 1.001
+
+    def test_history_records_passes(self):
+        res = run_dse(build_unet(), U200,
+                      DSEConfig(batch=1, cut_kinds=("conv", "pool"), word_bits=8))
+        passes = {h.get("pass") for h in res.history}
+        assert 1 in passes and 2 in passes and 5 in passes
+
+    def test_batch_size_amortises_reconfig(self):
+        """Table IV trend: reconfig contribution shrinks with batch size."""
+        thr = {}
+        for b in (1, 16):
+            res = run_dse(build_unet(), ZCU102,
+                          DSEConfig(batch=b, cut_kinds=("conv", "pool"), word_bits=8))
+            thr[b] = res.throughput_fps
+        assert thr[16] >= thr[1]
+
+
+class TestSnapshot:
+    def test_restore_undoes_mutation(self):
+        g = build_unet()
+        g.compute_buffer_depths()
+        snap = _snapshot(g)
+        for v in g.vertices():
+            v.par = v.max_par
+            v.frag_ratio = 0.5
+        for e in g.edges():
+            e.evicted = True
+        _restore(g, snap)
+        assert all(v.par == v.min_par and v.frag_ratio == 0.0 for v in g.vertices())
+        assert not any(e.evicted for e in g.edges())
+
+
+class TestPackOnchip:
+    def test_balances_utilisation(self):
+        out = pack_onchip(weight_bits=200e6, buffer_bits=80e6, dev=U200)
+        assert out["feasible"]
+        assert out["bram"] <= U200.bram18k and out["uram"] <= U200.uram
+
+    def test_infeasible_when_too_big(self):
+        out = pack_onchip(weight_bits=1e10, buffer_bits=1e9, dev=ZCU102)
+        assert not out["feasible"]
+
+    def test_no_uram_device(self):
+        out = pack_onchip(weight_bits=10e6, buffer_bits=5e6, dev=ZCU102)
+        assert out["uram"] == 0
+
+
+class TestPlan:
+    def test_plan_roundtrip(self):
+        res = run_dse(build_unet(), U200,
+                      DSEConfig(batch=1, cut_kinds=("conv", "pool"), word_bits=8))
+        plan = plan_from_dse("unet", "u200", res)
+        j = plan.to_json()
+        back = ExecutionPlan.from_json(j)
+        assert back.n_stages == plan.n_stages
+        assert set(back.layers) == set(plan.layers)
+        assert back.est_throughput_fps == pytest.approx(plan.est_throughput_fps)
+
+    def test_stage_layers_partition(self):
+        res = run_dse(build_unet(), U200,
+                      DSEConfig(batch=1, cut_kinds=("conv", "pool"), word_bits=8))
+        plan = plan_from_dse("unet", "u200", res)
+        all_layers = set()
+        for s in range(plan.n_stages):
+            all_layers |= set(plan.stage_layers(s))
+        assert all_layers == set(plan.layers)

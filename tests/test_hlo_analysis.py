@@ -1,0 +1,97 @@
+"""Trip-count-aware HLO analysis: validated against programs with known
+FLOP counts (XLA's own cost_analysis counts while bodies once — these tests
+pin the behaviour our roofline depends on)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (collective_stats, cost_stats,
+                                       memory_stats, trip_aware_stats)
+
+
+def _stats(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return trip_aware_stats(c.as_text()), c
+
+
+class TestTripAwareFlops:
+    def test_plain_matmul_exact(self):
+        M, K, N = 128, 256, 512
+        s, _ = _stats(lambda a, b: a @ b, jnp.ones((M, K)), jnp.ones((K, N)))
+        assert s["flops_dot"] == pytest.approx(2 * M * K * N)
+
+    def test_scan_multiplies_trip_count(self):
+        n, M = 8, 128
+
+        def f(x, w):
+            y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=n)
+            return y.sum()
+
+        s, _ = _stats(f, jnp.ones((M, M)), jnp.ones((M, M)))
+        assert s["flops_dot"] == pytest.approx(2 * n * M ** 3)
+        assert s["max_multiplier"] == n
+
+    def test_nested_scans_compose(self):
+        M = 128
+
+        def g(x, w):
+            def outer(c, _):
+                c2, _ = jax.lax.scan(lambda cc, _: (cc @ w, None), c, None,
+                                     length=8)
+                return c2, None
+            y, _ = jax.lax.scan(outer, x, None, length=4)
+            return y.sum()
+
+        s, _ = _stats(g, jnp.ones((M, M)), jnp.ones((M, M)))
+        assert s["flops_dot"] == pytest.approx(2 * 32 * M ** 3)
+        assert s["max_multiplier"] == 32
+
+    def test_grad_of_scan(self):
+        n, M = 8, 128
+
+        def f(x, w):
+            y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=n)
+            return y.sum()
+
+        s, _ = _stats(jax.grad(f, argnums=1), jnp.ones((M, M)),
+                      jnp.ones((M, M)))
+        # fwd n dots + bwd 2n dots
+        assert s["flops_dot"] == pytest.approx(2 * 3 * n * M ** 3, rel=0.01)
+
+    def test_xla_cost_analysis_undercounts_scans(self):
+        """The reason this module exists."""
+        M = 128
+
+        def mk(n):
+            def f(x, w):
+                y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                                    length=n)
+                return y.sum()
+            return f
+
+        c2 = jax.jit(mk(2)).lower(jnp.ones((M, M)), jnp.ones((M, M))).compile()
+        c8 = jax.jit(mk(8)).lower(jnp.ones((M, M)), jnp.ones((M, M))).compile()
+        assert (c2.cost_analysis()["flops"]
+                == c8.cost_analysis()["flops"])          # XLA: same!
+        s2 = trip_aware_stats(c2.as_text())
+        s8 = trip_aware_stats(c8.as_text())
+        assert s8["flops_dot"] == pytest.approx(4 * s2["flops_dot"])
+
+
+class TestStatsHelpers:
+    def test_memory_and_cost_stats_present(self):
+        c = jax.jit(lambda a: (a @ a).sum()).lower(jnp.ones((64, 64))).compile()
+        m = memory_stats(c)
+        assert "temp_size_in_bytes" in m
+        assert cost_stats(c)["flops"] > 0
+
+    def test_collective_stats_empty_on_single_device(self):
+        c = jax.jit(lambda a: (a @ a).sum()).lower(jnp.ones((64, 64))).compile()
+        s = collective_stats(c.as_text())
+        assert s.total_bytes == 0.0 and s.n_ops == 0
+
+    def test_trip_aware_no_loops(self):
+        c = jax.jit(lambda a: a * 2).lower(jnp.ones((8,))).compile()
+        s = trip_aware_stats(c.as_text())
+        assert s["flops_dot"] == 0.0
+        assert s["max_multiplier"] == 1.0

@@ -1,0 +1,143 @@
+"""Pallas kernel tests: interpret-mode allclose against the jnp oracles,
+with shape/dtype sweeps and hypothesis property checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bfp8 import bfp8_dequant, bfp8_quant
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import evict_decode, evict_encode, fragmented_matmul
+from repro.kernels.streamed_matmul import streamed_matmul, vmem_bytes
+
+
+class TestStreamedMatmul:
+    @pytest.mark.parametrize("M,K,N", [(128, 256, 128), (256, 512, 256),
+                                       (128, 384, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref_shapes(self, M, K, N, dtype):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (M, K), dtype)
+        ks = 128
+        ws = jax.random.normal(key, (ks, N), dtype)
+        wd = jax.random.normal(key, (K - ks, N), dtype)
+        got = streamed_matmul(x, ws, wd, interpret=True)
+        want = ref.streamed_matmul_ref(x, ws, wd)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("static_fraction", [0.0, 0.25, 0.5, 1.0])
+    def test_fragmented_matmul_fraction_invisible(self, static_fraction):
+        """The m knob changes memory placement, never the math (Eq. 3)."""
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (128, 512), jnp.float32)
+        w = jax.random.normal(key, (512, 256), jnp.float32)
+        got = fragmented_matmul(x, w, static_fraction=static_fraction,
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_block_size_sweep(self):
+        key = jax.random.PRNGKey(2)
+        x = jax.random.normal(key, (256, 384), jnp.float32)
+        ws = jax.random.normal(key, (128, 256), jnp.float32)
+        wd = jax.random.normal(key, (256, 256), jnp.float32)
+        want = ref.streamed_matmul_ref(x, ws, wd)
+        for bm in (128, 256):
+            for bn in (128, 256):
+                got = streamed_matmul(x, ws, wd, bm=bm, bn=bn, bk=128,
+                                      interpret=True)
+                np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                           rtol=1e-4, atol=1e-4)
+
+    def test_vmem_accounting_monotonic(self):
+        """Bigger static region -> bigger VMEM claim (the Eq. 7 check)."""
+        a = vmem_bytes(128, 4096, 128, 128, 128)
+        b = vmem_bytes(1024, 4096, 128, 128, 128)
+        assert b > a
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,H,D", [(256, 2, 64), (512, 4, 128)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, S, H, D, causal):
+        key = jax.random.PRNGKey(3)
+        q, k, v = (jax.random.normal(key, (2, S, H, D), jnp.float32)
+                   for key in jax.random.split(key, 3))
+        got = flash_attention(q, k, v, causal=causal, bq=128, bk=128,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bfloat16(self):
+        key = jax.random.PRNGKey(4)
+        q, k, v = (jax.random.normal(k2, (1, 256, 2, 64), jnp.bfloat16)
+                   for k2 in jax.random.split(key, 3))
+        got = flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_block_sweep_same_answer(self):
+        key = jax.random.PRNGKey(5)
+        q, k, v = (jax.random.normal(k2, (1, 512, 2, 64), jnp.float32)
+                   for k2 in jax.random.split(key, 3))
+        outs = [np.asarray(flash_attention(q, k, v, causal=True, bq=bq,
+                                           bk=bk, interpret=True))
+                for bq in (128, 256) for bk in (128, 256)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+    def test_matches_model_oracle(self):
+        """Also agrees with the model's chunked_attention (the serving path)."""
+        from repro.models.attention import chunked_attention
+        key = jax.random.PRNGKey(6)
+        q, k, v = (jax.random.normal(k2, (2, 256, 4, 64), jnp.float32)
+                   for k2 in jax.random.split(key, 3))
+        a = np.asarray(flash_attention(q, k, v, causal=True, bq=128, bk=128,
+                                       interpret=True))
+        b = np.asarray(chunked_attention(q, k, v, causal=True, chunk=128))
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+class TestBFP8Kernel:
+    @pytest.mark.parametrize("R,C,block", [(256, 128, 32), (512, 256, 64),
+                                           (64, 512, 128)])
+    def test_roundtrip_matches_ref(self, R, C, block):
+        key = jax.random.PRNGKey(7)
+        x = jax.random.normal(key, (R, C), jnp.float32) * 100
+        man, exp = bfp8_quant(x, block=block, interpret=True)
+        man_r, exp_r = ref.bfp8_quant_ref(x, block=block)
+        np.testing.assert_array_equal(np.asarray(man), np.asarray(man_r))
+        np.testing.assert_array_equal(np.asarray(exp), np.asarray(exp_r))
+        out = bfp8_dequant(man, exp, block=block, interpret=True)
+        want = ref.bfp8_dequant_ref(man_r, exp_r, block=block)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-6)
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_error_bound_property(self, seed):
+        """|x - dequant(quant(x))| <= 2^(exp-7) per block, any input."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64, 128),
+                              jnp.float32) * 10 ** (seed % 5)
+        man, exp = evict_encode(x, interpret=True)
+        out = evict_decode(man, exp, interpret=True)
+        scale = np.exp2(np.asarray(exp, np.float32) - 6.0)
+        err = np.abs(np.asarray(x) - np.asarray(out)).reshape(64, 4, 32)
+        assert (err <= scale[..., None] * 0.5 + 1e-30).all()
+
+    def test_compression_ratio(self):
+        """8-bit mantissa + 1/4 exponent byte per 32-block vs bf16 words."""
+        x = jax.random.normal(jax.random.PRNGKey(8), (128, 128), jnp.float32)
+        man, exp = evict_encode(x, interpret=True)
+        raw_bits = x.size * 16                  # stream words are bf16
+        enc_bits = man.size * 8 + exp.size * 8
+        assert enc_bits / raw_bits == pytest.approx((8 + 8 / 32) / 16)

@@ -1,0 +1,99 @@
+"""Launcher-level tests: input_specs contract, mesh construction, CLI smoke."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import make_host_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class TestInputSpecs:
+    def _specs(self, arch, shape):
+        from repro.runtime.steps import input_specs
+        mesh = make_host_mesh()
+        return input_specs(ARCHS[arch], SHAPES[shape], mesh)
+
+    def test_train_specs_structure(self):
+        s = self._specs("yi-6b", "train_4k")
+        assert set(s) == {"params", "opt_state", "batch"}
+        assert s["batch"]["tokens"].shape == (256, 4096)
+        assert s["batch"]["tokens"].dtype == jnp.int32
+
+    def test_prefill_specs_structure(self):
+        s = self._specs("glm4-9b", "prefill_32k")
+        assert set(s) == {"params", "cache", "batch"}
+        assert s["batch"]["tokens"].shape == (32, 32768)
+
+    def test_decode_specs_structure(self):
+        s = self._specs("granite-8b", "decode_32k")
+        assert set(s) == {"params", "cache", "token", "pos"}
+        assert s["token"].shape == (128, 1)
+        assert s["pos"].shape == (128,)
+        # cache sequence length equals the shape's seq_len
+        k = s["cache"]["pos_0"]["k"]
+        assert k.shape[2] == 32768
+
+    def test_encdec_gets_frames(self):
+        s = self._specs("whisper-large-v3", "prefill_32k")
+        assert "enc_frames" in s["batch"]
+        assert s["batch"]["enc_frames"].shape == (32, 1500, 1280)
+
+    def test_vlm_gets_patches(self):
+        s = self._specs("qwen2-vl-72b", "train_4k")
+        assert "patch_embeds" in s["batch"]
+        assert s["batch"]["patch_embeds"].shape == (256, 1024, 8192)
+
+    def test_no_allocation(self):
+        """input_specs are pure ShapeDtypeStructs — zero device memory."""
+        s = self._specs("yi-6b", "decode_32k")
+        for leaf in jax.tree.leaves(s):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+class TestMesh:
+    def test_host_mesh(self):
+        mesh = make_host_mesh()
+        assert mesh.shape == {"data": 1, "model": 1}
+
+    def test_production_mesh_shapes_via_subprocess(self):
+        """512 placeholder devices; must run in its own process because jax
+        locks the device count on first init."""
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+                   XLA_FLAGS="--xla_force_host_platform_device_count=512")
+        code = (
+            "from repro.launch.mesh import make_production_mesh\n"
+            "m1 = make_production_mesh()\n"
+            "assert dict(m1.shape) == {'data': 16, 'model': 16}, m1.shape\n"
+            "m2 = make_production_mesh(multi_pod=True)\n"
+            "assert dict(m2.shape) == {'pod': 2, 'data': 16, 'model': 16}\n"
+            "print('OK')\n")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0 and "OK" in out.stdout, out.stderr[-2000:]
+
+
+class TestCLISmoke:
+    def test_train_cli(self, tmp_path):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", "--arch", "yi-6b",
+             "--smoke", "--steps", "4", "--batch", "2", "--seq", "32",
+             "--ckpt-dir", str(tmp_path)],
+            env=env, capture_output=True, text=True, timeout=500)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "steps, loss" in out.stdout
+
+    def test_serve_cli(self):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b",
+             "--requests", "2", "--max-new", "3", "--s-max", "64"],
+            env=env, capture_output=True, text=True, timeout=500)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "tokens/s" in out.stdout

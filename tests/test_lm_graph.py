@@ -1,0 +1,80 @@
+"""SMOF DSE on LM architectures — the paper's optimiser driving the TPU
+runtime view (on-chip = HBM, off-chip = host DRAM)."""
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import DSEConfig, TPU_V5E_RUNTIME, plan_from_dse, run_dse
+from repro.core.lm_graph import build_lm_graph
+
+
+class TestLMGraphConstruction:
+    @pytest.mark.parametrize("name", ["yi-6b", "grok-1-314b",
+                                      "jamba-v0.1-52b", "xlstm-1.3b"])
+    def test_weight_words_match_param_count(self, name):
+        cfg = ARCHS[name]
+        g = build_lm_graph(cfg, batch=4, seq=2048, kind="prefill")
+        predicted = cfg.param_counts()["total"]
+        got = g.total_weight_words()
+        assert abs(got - predicted) / predicted < 0.12, (got, predicted)
+
+    def test_moe_layers_present(self):
+        g = build_lm_graph(ARCHS["olmoe-1b-7b"], batch=2, seq=512)
+        kinds = {v.kind for v in g.vertices()}
+        assert "router" in kinds and "expert" in kinds
+
+    def test_hybrid_interleave(self):
+        g = build_lm_graph(ARCHS["jamba-v0.1-52b"], batch=2, seq=512)
+        attn = sum(1 for v in g.vertices() if v.kind == "attention")
+        ssm = sum(1 for v in g.vertices() if v.kind == "ssm_scan")
+        assert attn == 4 and ssm == 28          # 1:7 over 32 layers
+
+    def test_decode_kv_cache_is_deep_buffer(self):
+        cfg = ARCHS["yi-6b"]
+        g = build_lm_graph(cfg, batch=8, seq=8192, kind="decode")
+        deep = max(e.buffer_depth for e in g.edges())
+        assert deep == pytest.approx(8 * 8192 * cfg.n_kv_heads * cfg.hd * 2)
+
+    def test_acyclic_and_connected(self):
+        g = build_lm_graph(ARCHS["glm4-9b"], batch=2, seq=256)
+        order = g.topo()                         # raises if cyclic
+        assert order[0] == "input" and order[-1] == "output"
+
+
+class TestDSEOnLM:
+    def test_big_model_triggers_offchip(self):
+        """grok-1 (632 GB bf16 weights) vs one 16 GB chip: the DSE must use
+        fragmentation (host weight streaming) and/or partitioning — the
+        exact regime the paper built SMOF for."""
+        import dataclasses
+        cfg = dataclasses.replace(ARCHS["grok-1-314b"], n_layers=8)
+        g = build_lm_graph(cfg, batch=1, seq=2048, kind="prefill")
+        res = run_dse(g, TPU_V5E_RUNTIME,
+                      DSEConfig(batch=1, word_bits=16, frag_step=0.25,
+                                cut_kinds=("expert",), max_iters=20))
+        used_offchip = (any(v.frag_ratio > 0 for v in g.vertices())
+                        or res.partitioning.n > 1)
+        assert used_offchip
+
+    def test_small_model_stays_resident(self):
+        """xlstm-1.3b (2.8 GB) fits one chip: no fragmentation needed."""
+        import dataclasses
+        cfg = dataclasses.replace(ARCHS["xlstm-1.3b"], n_layers=8)
+        g = build_lm_graph(cfg, batch=1, seq=2048, kind="prefill")
+        res = run_dse(g, TPU_V5E_RUNTIME,
+                      DSEConfig(batch=1, word_bits=16,
+                                cut_kinds=("ssm_scan",), max_iters=20))
+        assert res.feasible
+        assert res.partitioning.n == 1
+        assert all(v.frag_ratio == 0 for v in g.vertices())
+
+    def test_plan_projects_to_runtime_knobs(self):
+        import dataclasses
+        cfg = dataclasses.replace(ARCHS["yi-6b"], n_layers=8)
+        g = build_lm_graph(cfg, batch=1, seq=1024, kind="prefill")
+        res = run_dse(g, TPU_V5E_RUNTIME,
+                      DSEConfig(batch=1, word_bits=16,
+                                cut_kinds=("attention",), max_iters=20))
+        plan = plan_from_dse(cfg.name, "tpu_v5e_runtime", res)
+        assert plan.n_stages == res.partitioning.n
+        for lp in plan.layers.values():
+            assert 0.0 <= lp.weight_static_fraction <= 1.0

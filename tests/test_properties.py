@@ -1,0 +1,105 @@
+"""Hypothesis property tests for system-level invariants of the SMOF core."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Graph, U200, Vertex
+from repro.core.partition import (Partitioning, initial_partition, latency_s,
+                                  merge)
+from repro.core.pipeline import (initiation_interval, pipeline_depth,
+                                 vertex_delays)
+
+
+def chain(n, macs, depths):
+    g = Graph("c")
+    g.add(Vertex("in", "input", in_words=64, out_words=64))
+    prev = "in"
+    for i in range(n):
+        g.add(Vertex(f"v{i}", "conv", work_macs=float(macs[i]),
+                     weight_words=100, in_words=64, out_words=64,
+                     base_depth=float(depths[i]), max_par=16))
+        g.connect(prev, f"v{i}")
+        prev = f"v{i}"
+    return g
+
+
+@given(st.integers(1, 6),
+       st.lists(st.integers(100, 100_000), min_size=6, max_size=6),
+       st.lists(st.integers(1, 500), min_size=6, max_size=6))
+@settings(max_examples=30, deadline=None)
+def test_pipeline_depth_positive_and_bounded(n, macs, depths):
+    g = chain(n, macs, depths)
+    d = pipeline_depth(g)
+    assert d > 0
+    # upper bound: every vertex at its worst-case initiation rate
+    rates = {v: max(1e-12, 64 / max(m + 10, 64))
+             for v, m in zip([f"v{i}" for i in range(n)], macs)}
+    assert np.isfinite(d)
+
+
+@given(st.lists(st.integers(1_000, 1_000_000), min_size=4, max_size=4))
+@settings(max_examples=25, deadline=None)
+def test_parallelism_never_hurts_ii(macs):
+    g = chain(4, macs, [10] * 4)
+    ii_before = initiation_interval(g)
+    for v in g.vertices():
+        v.par = min(v.par * 4, v.max_par)
+    assert initiation_interval(g) <= ii_before
+
+
+@given(st.lists(st.integers(100, 50_000), min_size=5, max_size=5))
+@settings(max_examples=25, deadline=None)
+def test_delays_monotone_along_chain(macs):
+    """Eq. 10: Delay accumulates — downstream >= upstream."""
+    g = chain(5, macs, [5] * 5)
+    d = vertex_delays(g)
+    prev = d["in"]
+    for i in range(5):
+        assert d[f"v{i}"] >= prev
+        prev = d[f"v{i}"]
+
+
+@given(st.integers(2, 5), st.integers(1, 16))
+@settings(max_examples=20, deadline=None)
+def test_merge_preserves_vertex_set(n, batch):
+    g = chain(n, [1000] * n, [10] * n)
+    g.compute_buffer_depths()
+    p = initial_partition(g, cut_kinds=None)
+    all_v = set(g.g.nodes)
+    while p.n > 1:
+        p = merge(p, 0)
+        assert set(v for part in p.parts for v in part) == all_v
+        p.validate()
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=15, deadline=None)
+def test_latency_monotone_in_batch(batch):
+    g = chain(3, [10_000, 5_000, 2_000], [10, 10, 10])
+    g.compute_buffer_depths()
+    p = initial_partition(g, cut_kinds=None)
+    t1 = latency_s(p, U200, batch)
+    t2 = latency_s(p, U200, batch + 1)
+    assert t2 >= t1
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_buffer_depths_nonnegative_any_dag(seed, width):
+    """Random DAGs: buffer depths are always >= the double-buffer floor."""
+    rng = np.random.default_rng(seed)
+    g = Graph("r")
+    g.add(Vertex("in", "input", in_words=32, out_words=32))
+    names = ["in"]
+    for i in range(width):
+        v = g.add(Vertex(f"n{i}", "conv",
+                         work_macs=float(rng.integers(100, 10_000)),
+                         weight_words=10, in_words=32, out_words=32,
+                         base_depth=float(rng.integers(1, 100)), max_par=8))
+        for parent in rng.choice(names, size=min(2, len(names)),
+                                 replace=False):
+            g.connect(str(parent), v.name)
+        names.append(v.name)
+    g.compute_buffer_depths()
+    for e in g.edges():
+        assert e.buffer_depth >= 2.0

@@ -1,0 +1,119 @@
+"""Multi-device runtime tests: sharding rules, step lowering, gradient
+compression — run in subprocesses with XLA host-device placeholders, since
+device count locks at first jax init."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(n_devices: int, code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+class TestShardingRules:
+    def test_param_specs_divisibility_guarded(self):
+        out = run_py(8, """
+            import jax, jax.numpy as jnp
+            from repro.configs import ARCHS
+            from repro.runtime import sharding as SH
+            from repro.runtime.steps import abstract_params
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            for name in ("yi-6b", "whisper-large-v3", "olmoe-1b-7b"):
+                cfg = ARCHS[name]
+                sh = SH.param_shardings(cfg, abstract_params(cfg), mesh)
+                for path, s in jax.tree_util.tree_leaves_with_path(sh):
+                    pass   # construction alone validates divisibility guard
+            print("OK")
+        """)
+        assert "OK" in out
+
+    def test_small_mesh_train_step_runs(self):
+        """An actual sharded train step executes on an 8-device host mesh."""
+        out = run_py(8, """
+            import jax, jax.numpy as jnp
+            from repro.configs import ARCHS
+            from repro.models import init_params
+            from repro.optim.adamw import AdamWConfig, init_opt_state
+            from repro.runtime.steps import make_train_step
+            cfg = ARCHS["yi-6b"].reduced()
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            opt_cfg = AdamWConfig(lr=1e-3)
+            with mesh:
+                step, (p_sh, o_sh), _ = make_train_step(
+                    cfg, mesh, opt_cfg, remat="full", dtype=jnp.float32)
+                params = jax.device_put(
+                    init_params(jax.random.PRNGKey(0), cfg, jnp.float32), p_sh)
+                opt = jax.device_put(init_opt_state(params, opt_cfg), o_sh)
+                batch = {"tokens": jnp.zeros((4, 64), jnp.int32),
+                         "labels": jnp.zeros((4, 64), jnp.int32)}
+                fn = jax.jit(step)
+                p2, o2, m = fn(params, opt, batch)
+                l1 = float(m["loss"])
+                p3, o3, m2 = fn(p2, o2, batch)
+            assert float(m2["loss"]) < l1   # loss drops on repeated batch
+            print("LOSS", l1, float(m2["loss"]))
+        """)
+        assert "LOSS" in out
+
+    def test_decode_step_runs_sharded(self):
+        out = run_py(8, """
+            import jax, jax.numpy as jnp
+            from repro.configs import ARCHS
+            from repro.models import init_params, init_cache
+            from repro.runtime.steps import make_decode_step
+            cfg = ARCHS["yi-6b"].reduced()
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            with mesh:
+                step, (p_sh, c_sh), _ = make_decode_step(
+                    cfg, mesh, batch=4, s_max=32, dtype=jnp.float32)
+                params = jax.device_put(
+                    init_params(jax.random.PRNGKey(0), cfg, jnp.float32), p_sh)
+                cache = jax.device_put(
+                    init_cache(cfg, 4, 32, jnp.float32), c_sh)
+                logits, cache = jax.jit(step)(
+                    params, cache, jnp.zeros((4, 1), jnp.int32),
+                    jnp.zeros((4,), jnp.int32))
+            assert logits.shape == (4, cfg.vocab)
+            print("OK", bool(jnp.isfinite(logits).all()))
+        """)
+        assert "OK True" in out
+
+
+class TestPodCompression:
+    def test_compressed_grads_match_uncompressed_direction(self):
+        """shard_map over a 2-pod mesh: int8-EF cross-pod grads track the
+        exact mean within quantisation error."""
+        out = run_py(8, """
+            import jax, jax.numpy as jnp
+            from jax.sharding import PartitionSpec as P
+            from repro.optim.compress import (make_pod_compressed_grad_fn,
+                                              init_error_state)
+            mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+            def loss_fn(w, batch):
+                return jnp.mean((batch @ w["w"]) ** 2)
+            params = {"w": jnp.ones((16, 16)) * 0.1}
+            batch = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+            err = init_error_state(params)
+            with jax.set_mesh(mesh):
+                fn = make_pod_compressed_grad_fn(loss_fn, mesh)
+                grads, loss, new_err = jax.jit(fn)(params, batch, err)
+            exact = jax.grad(lambda w: loss_fn(w, batch))(params)
+            rel = (jnp.abs(grads["w"] - exact["w"]).max()
+                   / jnp.abs(exact["w"]).max())
+            assert float(rel) < 0.02, float(rel)
+            print("REL", float(rel))
+        """)
+        assert "REL" in out

@@ -1,0 +1,316 @@
+"""Substrate tests: data pipeline, checkpointing, fault tolerance, optimizer,
+gradient compression, serving engine, staged executor."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import ARCHS
+from repro.data.pipeline import DataConfig, TokenPipeline, write_token_file
+from repro.models import init_params, lm_loss, project_logits, forward
+from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
+                               schedule)
+from repro.optim.compress import (dequantize_int8, ef_compress_tree,
+                                  init_error_state, quantize_int8)
+from repro.runtime.fault import FaultConfig, FaultTolerantLoop
+from repro.runtime.reconfigure import StagedExecutor, split_group_stages
+from repro.serving.engine import ServingEngine
+
+
+class TestDataPipeline:
+    def test_deterministic_per_step(self):
+        p = TokenPipeline(DataConfig(vocab=100, seq_len=8, global_batch=4))
+        a, b = p.batch_at(7), p.batch_at(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        p = TokenPipeline(DataConfig(vocab=100, seq_len=8, global_batch=4))
+        assert not np.array_equal(p.batch_at(0)["tokens"],
+                                  p.batch_at(1)["tokens"])
+
+    def test_labels_shifted(self):
+        p = TokenPipeline(DataConfig(vocab=100, seq_len=8, global_batch=2))
+        b = p.batch_at(0)
+        assert b["tokens"].shape == b["labels"].shape == (2, 8)
+
+    def test_file_source_roundtrip(self, tmp_path):
+        path = str(tmp_path / "toks.bin")
+        write_token_file(path, np.arange(10_000) % 50)
+        p = TokenPipeline(DataConfig(vocab=50, seq_len=16, global_batch=2,
+                                     source="file", path=path))
+        b = p.batch_at(0)
+        assert b["tokens"].max() < 50
+
+    def test_prefetch_iterator_resumes(self):
+        p = TokenPipeline(DataConfig(vocab=100, seq_len=8, global_batch=2))
+        it = p.iter_from(5)
+        first = next(it)
+        np.testing.assert_array_equal(first["tokens"], p.batch_at(5)["tokens"])
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "b": {"c": jnp.ones((5,), jnp.bfloat16)}}
+
+    def test_roundtrip(self, tmp_path):
+        store = CheckpointStore(str(tmp_path))
+        t = self._tree()
+        store.save(3, t, {"next_step": 4})
+        out, extra = store.restore(jax.tree.map(np.asarray, t))
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(t["a"]))
+        assert extra["next_step"] == 4
+
+    def test_bfp8_roundtrip_close(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), bfp8=True)
+        t = {"w": jnp.asarray(np.random.default_rng(0).normal(
+            size=(64, 64)).astype(np.float32))}
+        store.save(1, t)
+        out, _ = store.restore(t)
+        err = np.abs(np.asarray(out["w"]) - np.asarray(t["w"]))
+        assert err.max() < np.abs(np.asarray(t["w"])).max() * 0.02
+
+    def test_atomic_commit_no_tmp_left(self, tmp_path):
+        store = CheckpointStore(str(tmp_path))
+        store.save(1, self._tree())
+        assert not list(tmp_path.glob("*.tmp"))
+        assert store.latest_step() == 1
+
+    def test_gc_keeps_last(self, tmp_path):
+        store = CheckpointStore(str(tmp_path), keep_last=2)
+        for s in (1, 2, 3, 4):
+            store.save(s, self._tree())
+        assert store.steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        store = CheckpointStore(str(tmp_path))
+        store.save_async(5, self._tree())
+        store.wait()
+        assert store.latest_step() == 5
+
+    def test_restore_with_new_sharding(self, tmp_path):
+        """Elastic remesh: restore onto explicit shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        store = CheckpointStore(str(tmp_path))
+        t = self._tree()
+        store.save(1, t)
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+        out, _ = store.restore(t, shardings=sh)
+        assert out["a"].sharding == NamedSharding(mesh, P())
+
+
+class TestFaultTolerance:
+    def _setup(self, tmp_path, fail_at=()):
+        store = CheckpointStore(str(tmp_path))
+        calls = {"n": 0}
+
+        def step_fn(state, batch):
+            return {"x": state["x"] + batch}
+
+        def injector(step):
+            if step in fail_at and calls.setdefault(f"f{step}", 0) < 1:
+                calls[f"f{step}"] = 1
+                raise RuntimeError(f"injected fault at {step}")
+
+        loop = FaultTolerantLoop(step_fn, store,
+                                 FaultConfig(checkpoint_every=3,
+                                             max_retries=1),
+                                 fault_injector=injector)
+        return loop, store
+
+    def test_clean_run(self, tmp_path):
+        loop, store = self._setup(tmp_path)
+        out = loop.run({"x": 0}, lambda s: 1, start_step=0, num_steps=10)
+        assert out["x"] == 10
+        assert store.latest_step() == 9  # checkpoint at step 9
+
+    def test_transient_fault_retried(self, tmp_path):
+        loop, _ = self._setup(tmp_path, fail_at=(4,))
+        out = loop.run({"x": 0}, lambda s: 1, start_step=0, num_steps=8)
+        assert out["x"] == 8
+        assert any(e["kind"] == "retry" for e in loop.events)
+
+    def test_restart_resumes_from_checkpoint(self, tmp_path):
+        loop, store = self._setup(tmp_path)
+        loop.run({"x": 0}, lambda s: 1, start_step=0, num_steps=7)
+        # simulate a node failure + restart
+        loop2, _ = self._setup(tmp_path)
+        state, next_step = loop2.try_restore({"x": 0})
+        assert next_step == 6
+        out = loop2.run(state, lambda s: 1, start_step=next_step, num_steps=4)
+        assert out["x"] == 10  # 6 from ckpt + 4 more
+
+    def test_straggler_detection(self, tmp_path):
+        import time as _t
+        store = CheckpointStore(str(tmp_path))
+
+        def slow_step(state, batch):
+            if batch == 9:
+                _t.sleep(0.25)
+            else:
+                _t.sleep(0.01)
+            return state
+
+        loop = FaultTolerantLoop(slow_step, store,
+                                 FaultConfig(straggler_factor=3.0))
+        loop.run({}, lambda s: s, start_step=0, num_steps=12)
+        assert any(e["kind"] == "straggler" for e in loop.events)
+
+
+class TestOptimizer:
+    def test_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+        lrs = [float(schedule(cfg, jnp.asarray(s))) for s in (0, 5, 10, 100)]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(5e-4)
+        assert lrs[2] == pytest.approx(1e-3)
+        assert lrs[3] == pytest.approx(1e-4, rel=0.05)
+
+    @pytest.mark.parametrize("quantize", [False, True])
+    def test_descends_quadratic(self, quantize):
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                          total_steps=200, quantize_states=quantize)
+        params = {"w": jnp.asarray([3.0, -2.0, 1.5])[None, :]}
+        state = init_opt_state(params, cfg)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}      # d/dw of w^2
+            params, state, _ = adamw_update(params, grads, state, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.15
+
+    def test_quantized_state_is_int8(self):
+        cfg = AdamWConfig(quantize_states=True)
+        params = {"w": jnp.ones((4, 256))}
+        state = init_opt_state(params, cfg)
+        assert state["m"]["w"]["q"].dtype == jnp.int8
+        # 1 byte payload vs 4 bytes fp32
+        from repro.optim.adamw import opt_state_bytes
+        plain = init_opt_state(params, AdamWConfig())
+        assert opt_state_bytes(state) < 0.4 * opt_state_bytes(plain)
+
+
+class TestGradCompression:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_quantize_roundtrip_bounded(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (8, 64)) * 10
+        q, s = quantize_int8(x)
+        back = dequantize_int8(q, s)
+        assert float(jnp.abs(back - x).max()) <= float(s.max()) * 0.51
+
+    def test_error_feedback_reduces_bias(self):
+        """With EF, the accumulated compressed sum tracks the true sum."""
+        rng = np.random.default_rng(0)
+        true_sum = np.zeros((4, 64), np.float32)
+        ef_sum = np.zeros((4, 64), np.float32)
+        err = {"g": jnp.zeros((4, 64), jnp.float32)}
+        for _ in range(50):
+            g = rng.normal(size=(4, 64)).astype(np.float32) * 0.01
+            true_sum += g
+            q, s, new_err = ef_compress_tree({"g": jnp.asarray(g)}, err)
+            ef_sum += np.asarray(dequantize_int8(q["g"], s["g"]))
+            err = {"g": new_err["g"]}
+        # residual bounded by one final quantisation error, not accumulated
+        resid = np.abs(true_sum - ef_sum).max()
+        assert resid < 0.01
+
+    def test_compression_ratio(self):
+        g = {"w": jnp.ones((128, 128), jnp.float32)}
+        q, s, _ = ef_compress_tree(g, init_error_state(g))
+        raw = 128 * 128 * 4
+        comp = 128 * 128 * 1 + 128 * 4
+        assert comp / raw < 0.27
+
+
+class TestServingEngine:
+    def _engine(self, **kw):
+        cfg = ARCHS["yi-6b"].reduced()
+        params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+        return cfg, params, ServingEngine(cfg, params, max_batch=2, s_max=64,
+                                          **kw)
+
+    def test_generates_tokens(self):
+        _, _, eng = self._engine()
+        r = eng.submit(np.arange(8), max_new_tokens=5)
+        eng.run_until_drained()
+        assert r.done and len(r.out_tokens) == 5
+        assert eng.stats.prefills == 1
+
+    def test_continuous_batching_slots_reused(self):
+        _, _, eng = self._engine()
+        rs = [eng.submit(np.arange(4) + i, max_new_tokens=3)
+              for i in range(5)]
+        eng.run_until_drained()
+        assert all(r.done for r in rs)
+        assert eng.stats.prefills == 5          # 5 requests through 2 slots
+
+    def test_greedy_matches_unbatched_forward(self):
+        """Engine output == argmax decoding with the raw model."""
+        cfg, params, eng = self._engine()
+        prompt = np.arange(6)
+        r = eng.submit(prompt, max_new_tokens=4)
+        eng.run_until_drained()
+        # reference: iterative full forward
+        toks = list(prompt)
+        out = []
+        for _ in range(4):
+            x, _, _ = forward(params, cfg, jnp.asarray(toks)[None])
+            nxt = int(jnp.argmax(project_logits(params, cfg, x[:, -1]), -1)[0])
+            out.append(nxt)
+            toks.append(nxt)
+        assert r.out_tokens == out
+
+    def test_eviction_compresses(self):
+        _, _, eng = self._engine(evict_to_host=True)
+        eng.submit(np.arange(4), max_new_tokens=3)
+        eng.run_until_drained()
+        assert eng.stats.evicted_pages > 0
+        assert (eng.stats.evicted_bytes_compressed
+                < 0.6 * eng.stats.evicted_bytes_raw)
+
+
+class TestStagedExecutor:
+    def test_split_balanced(self):
+        assert split_group_stages(8, 3) == [(0, 3), (3, 6), (6, 8)]
+        assert split_group_stages(4, 8) == [(0, 1), (1, 2), (2, 3), (3, 4)]
+
+    def test_staged_matches_monolithic(self):
+        cfg = ARCHS["yi-6b"].reduced(n_layers=4)
+        params = init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
+        x, _, _ = forward(params, cfg, toks)
+        want = project_logits(params, cfg, x)
+        ex = StagedExecutor(cfg, params, n_stages=2, compress_boundary=False)
+        got = ex.forward_logits(toks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+        assert len(ex.timings) == 2
+
+    def test_boundary_compression_small_error(self):
+        cfg = ARCHS["yi-6b"].reduced(n_layers=4)
+        params = init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0, cfg.vocab)
+        plain = StagedExecutor(cfg, params, n_stages=2,
+                               compress_boundary=False)
+        comp = StagedExecutor(cfg, params, n_stages=2, compress_boundary=True)
+        a = np.asarray(plain.forward_logits(toks))
+        b = np.asarray(comp.forward_logits(toks))
+        # BFP8 boundary: small perturbation, same argmax almost everywhere
+        agree = (a.argmax(-1) == b.argmax(-1)).mean()
+        assert agree > 0.9
+        eq5 = comp.eq5_latency(batch=1)
+        assert eq5["boundary_compression"] < 0.6
+
+    def test_eq5_accounting(self):
+        cfg = ARCHS["yi-6b"].reduced(n_layers=4)
+        params = init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+        toks = jnp.zeros((1, 8), jnp.int32)
+        ex = StagedExecutor(cfg, params, n_stages=4)
+        ex.forward_logits(toks)
+        eq5 = ex.eq5_latency(batch=1)
+        assert eq5["n_stages"] == 4
+        assert eq5["total_s"] >= eq5["compute_s"]
