@@ -1,20 +1,52 @@
-"""Benchmark driver — one function per paper table/figure.
+"""Benchmark driver — one function per paper table/figure, plus the
+end-to-end executor benchmark.
 
-Prints ``name,us_per_call,derived`` CSV lines.  The roofline section reads
-the dry-run artifacts in results/dryrun (run launch/dryrun.py first; the
-checked-in results are used if present).
+CSV output schema (one line per benchmark point, written to stdout):
+
+    name,us_per_call,derived
+
+  name          ``<section>/<point>`` — section matches the paper artefact
+                (``table3``, ``table4``, ``table5``, ``fig6``, ``fig7``,
+                ``fig8``, ``kernels``, ``roofline``) or ``e2e`` for the
+                executed-pipeline benchmark.
+  us_per_call   median wall-clock microseconds of the timed callable
+                (DSE solve, kernel invocation, or jitted pipeline step;
+                0 where the point is analytic only).
+  derived       space-separated ``key=value`` metrics specific to the
+                point (fps, GMACs/s, compression ratios, rel_err, ...).
+
+The first line is the literal header ``name,us_per_call,derived``; all
+diagnostics go to stderr, so stdout is directly machine-readable.
+
+Modes:
+    python -m benchmarks.run            # full sweep
+    python -m benchmarks.run --smoke    # CI-sized subset (CPU-friendly)
+
+The roofline section reads the dry-run artifacts in results/dryrun (run
+``python -m repro.launch.dryrun --all`` first; checked-in results are used
+if present) — see README.md § "Benchmarks" for the full workflow.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 
-def main() -> None:
-    from . import (fig6_ablation, fig7_compression, fig8_variability,
-                   kernels_bench, roofline, table3_models,
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run",
+                                 description="SMOF benchmark driver")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (table3 + e2e) instead of the "
+                         "full sweep")
+    smoke = ap.parse_args(argv).smoke
+    from . import (e2e_executor, fig6_ablation, fig7_compression,
+                   fig8_variability, kernels_bench, roofline, table3_models,
                    table4_partitioning, table5_throughput)
     print("name,us_per_call,derived")
     table3_models.run()
+    e2e_executor.run(smoke=smoke)
+    if smoke:
+        return
     table4_partitioning.run()
     fig6_ablation.run()
     fig7_compression.run()
@@ -24,7 +56,9 @@ def main() -> None:
     try:
         roofline.run()
     except FileNotFoundError:
-        print("roofline,0,skipped (run `python -m repro.launch.dryrun --all` first)",
+        print("roofline,0,skipped (needs results/dryrun artifacts: run "
+              "`python -m repro.launch.dryrun --all` first — see README.md "
+              "§ Benchmarks)",
               file=sys.stderr)
 
 

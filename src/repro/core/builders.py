@@ -272,6 +272,139 @@ def build_x3d_m(frames: int = 16, hw: int = 256, cin: int = 3,
     return g
 
 
+# -----------------------------------------------------------------------------
+# Executable graphs (runtime/executor.py targets)
+#
+# The builders above are *cost-model* reconstructions at paper scale; the
+# ``*_exec`` builders below emit small graphs whose vertices additionally
+# carry ``meta["exec"]`` — the channel spec the executable lowering needs.
+# Tensors flow as (positions, channels) f32 stripes; conv acts as a 1x1
+# channel-mixing matmul, pool/upsample halve/double the position axis, and
+# the long encoder->decoder skips create exactly the deep synchronisation
+# buffers the paper's eviction mechanism attacks (§III-A).
+#
+# Channels are kept multiples of the BFP8 block (32) so an evicted stream's
+# spill traffic hits the compile-time c_bar = (8 + 8/32)/word_bits exactly.
+# -----------------------------------------------------------------------------
+
+class _XB(_B):
+    """Chain builder that also records the executable channel spec."""
+
+    def xconv(self, prev: str | None, cin: int, cout: int, m: int,
+              kind: str = "conv") -> str:
+        name, _ = self.conv(prev, cin, cout, (m,), k=1, kind=kind)
+        self.g.vertex(name).meta["exec"] = {"cin": cin, "cout": cout, "m": m}
+        return name
+
+    def xsimple(self, prev, kind: str, c: int, m: int, cout: int | None = None,
+                m_out: int | None = None) -> str:
+        name, _ = self.simple(prev, kind, c, (m,), cout=cout,
+                              out_spatial=(m_out,) if m_out else None)
+        self.g.vertex(name).meta["exec"] = {
+            "cin": c, "cout": cout or c, "m": m, "m_out": m_out or m}
+        return name
+
+
+def build_unet_exec(positions: int = 64, cin: int = 32, base: int = 32,
+                    levels: int = 3, n_classes: int = 32) -> Graph:
+    """UNet-style encoder/decoder with long skip concats, executable form.
+
+    ``positions`` is the flattened spatial extent at full resolution; each
+    pool halves it, each decoder upsample doubles it back, and every
+    encoder level's output rides a long skip to the matching decoder
+    concat — the topology whose synchronisation buffers SMOF evicts.
+    """
+    assert positions % (2 ** (levels - 1)) == 0
+    g = Graph("unet_exec")
+    b = _XB(g, word_bits=16, weight_bits=16)
+    m = positions
+    prev = b.xsimple(None, "input", cin, m)
+    skips: list[tuple[str, int, int]] = []
+    c = cin
+    for lv in range(levels):
+        cout = base * (2 ** lv)
+        prev = b.xconv(prev, c, cout, m)
+        prev = b.xsimple(prev, "act", cout, m)
+        c = cout
+        if lv < levels - 1:
+            skips.append((prev, c, m))
+            prev = b.xsimple(prev, "pool", c, m, m_out=m // 2)
+            m //= 2
+    for lv in reversed(range(levels - 1)):
+        cout = base * (2 ** lv)
+        prev = b.xsimple(prev, "upsample", c, m, m_out=m * 2)
+        m *= 2
+        prev = b.xconv(prev, c, cout, m, kind="deconv")
+        skip, sc, sm = skips.pop()
+        assert sm == m, (sm, m)
+        prev = b.xsimple([skip, prev], "concat", sc + cout, m)
+        prev = b.xconv(prev, sc + cout, cout, m)
+        prev = b.xsimple(prev, "act", cout, m)
+        c = cout
+    prev = b.xconv(prev, c, n_classes, m)
+    b.xsimple(prev, "output", n_classes, m)
+    return g
+
+
+def build_yolo_head_exec(positions: int = 64,
+                         widths: tuple[int, int, int] = (32, 64, 128),
+                         head: int = 32) -> Graph:
+    """YOLO-style multi-scale detection head, executable form.
+
+    A small backbone emits a three-level pyramid (P3/P4/P5); the PAN-style
+    neck runs top-down then bottom-up with cross-scale concats, so pyramid
+    features persist across many downstream layers — long branches with
+    deep buffers, like the UNet skips but re-converging at several scales.
+    """
+    assert positions % 4 == 0
+    g = Graph("yolo_head_exec")
+    b = _XB(g, word_bits=16, weight_bits=16)
+    m = positions
+    prev = b.xsimple(None, "input", widths[0], m)
+    pyramid: list[tuple[str, int, int]] = []
+    c = widths[0]
+    for i, w in enumerate(widths):
+        prev = b.xconv(prev, c, w, m)
+        prev = b.xsimple(prev, "act", w, m)
+        c = w
+        pyramid.append((prev, c, m))
+        if i < len(widths) - 1:
+            prev = b.xsimple(prev, "pool", c, m, m_out=m // 2)
+            m //= 2
+    (p3, c3, m3), (p4, c4, m4), (p5, c5, m5) = pyramid
+    # top-down
+    up5 = b.xsimple(p5, "upsample", c5, m5, m_out=m4)
+    cat4 = b.xsimple([p4, up5], "concat", c4 + c5, m4)
+    n4 = b.xconv(cat4, c4 + c5, c4, m4)
+    up4 = b.xsimple(n4, "upsample", c4, m4, m_out=m3)
+    cat3 = b.xsimple([p3, up4], "concat", c3 + c4, m3)
+    n3 = b.xconv(cat3, c3 + c4, c3, m3)
+    # bottom-up
+    d3 = b.xsimple(n3, "pool", c3, m3, m_out=m4)
+    cat4b = b.xsimple([d3, n4], "concat", c3 + c4, m4)
+    n4b = b.xconv(cat4b, c3 + c4, c4, m4)
+    d4 = b.xsimple(n4b, "pool", c4, m4, m_out=m5)
+    cat5 = b.xsimple([d4, p5], "concat", c4 + c5, m5)
+    n5 = b.xconv(cat5, c4 + c5, c5, m5)
+    # decoupled per-scale heads
+    outs = []
+    for hd, cch, hm in ((n3, c3, m3), (n4b, c4, m4), (n5, c5, m5)):
+        h1 = b.xconv(hd, cch, head, hm)
+        h1 = b.xsimple(h1, "act", head, hm)
+        h2 = b.xconv(h1, head, head, hm)
+        outs.append(h2)
+    out = b.xsimple(outs, "output", head, m3)
+    # the sink consumes all three scales, not just the m3 stripe
+    g.vertex(out).in_words = head * (m3 + m4 + m5)
+    return g
+
+
+EXEC_MODELS = {
+    "unet_exec": build_unet_exec,
+    "yolo_head_exec": build_yolo_head_exec,
+}
+
+
 PAPER_MODELS = {
     "unet": build_unet,
     "unet3d": build_unet3d,

@@ -169,6 +169,12 @@ class Graph:
     def predecessors(self, name: str) -> list[str]:
         return list(self.g.predecessors(name))
 
+    def in_edges(self, name: str) -> list[Edge]:
+        """Incoming edges in predecessor (insertion) order — the order
+        multi-input ops (concat, add) consume their operands, which the
+        executable lowering must preserve."""
+        return [self.edge(p, name) for p in self.predecessors(name)]
+
     def successors(self, name: str) -> list[str]:
         return list(self.g.successors(name))
 

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from .bfp8 import bfp8_dequant, bfp8_quant
 from .flash_attention import flash_attention
-from .streamed_matmul import streamed_matmul, vmem_bytes
+from .streamed_matmul import (streamed_matmul, streamed_matmul_padded,
+                              vmem_bytes)
 from . import ref
 
 
@@ -66,5 +67,5 @@ def evict_decode(man, exp, *, block: int = 32, dtype=jnp.float32,
 
 
 __all__ = ["fragmented_matmul", "flash_attn", "evict_encode", "evict_decode",
-           "streamed_matmul", "flash_attention", "bfp8_quant", "bfp8_dequant",
-           "vmem_bytes", "ref"]
+           "streamed_matmul", "streamed_matmul_padded", "flash_attention",
+           "bfp8_quant", "bfp8_dequant", "vmem_bytes", "ref"]

@@ -82,6 +82,44 @@ def streamed_matmul(x: jax.Array, w_static: jax.Array, w_dyn: jax.Array,
     )(x_static, x_dyn, w_static, w_dyn)
 
 
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def streamed_matmul_padded(x: jax.Array, w: jax.Array, *,
+                           static_fraction: float = 0.5, bm: int = 128,
+                           bk: int = 128, bn: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """``y = x @ w`` through :func:`streamed_matmul` for ARBITRARY shapes.
+
+    The raw kernel needs MXU-aligned dimensions (``M % bm``, ``N % bn``,
+    ``Ks % 128``, ``Kd % bk`` all zero); executable layer graphs come with
+    whatever channel counts the model dictates.  This wrapper zero-pads
+    ``x``/``w`` up to alignment (padded rows/columns contribute exact
+    zeros), splits ``w``'s rows at the 128-aligned point closest to
+    ``static_fraction`` (the plan's ``1 - m``), and slices the result back.
+    A weight matrix too small to split (K <= 128 after padding) falls back
+    to a plain dot — there is no dynamic region worth streaming.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    Kp = _round_up(K, 128)
+    if Kp <= 128:
+        return jnp.dot(x, w, preferred_element_type=jnp.float32
+                       ).astype(x.dtype)
+    ks = int(round(static_fraction * Kp / 128.0)) * 128
+    ks = max(min(ks, Kp - bk), 128)   # >= one static panel + one dyn block
+    kd = _round_up(Kp - ks, bk)
+    Kp = ks + kd
+    xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+    y = streamed_matmul(xp, wp[:ks], wp[ks:], bm=bm, bk=bk, bn=bn,
+                        interpret=interpret)
+    return y[:M, :N]
+
+
 def vmem_bytes(Ks: int, N: int, bm: int, bk: int, bn: int,
                itemsize: int = 2) -> int:
     """VMEM working set the kernel claims: pinned static panel + double-

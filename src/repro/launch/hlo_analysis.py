@@ -216,12 +216,14 @@ def trip_aware_stats(hlo: str) -> dict:
                 ops = re.findall(r"dot\(([^)]*)\)", s)
                 lhs_shape = None
                 if ops:
-                    first = ops[0].split(",")[0].strip()
-                    tm = _TYPE_RE.search(first)
+                    # modern HLO inlines operand types (`dot(f32[M,K]{1,0}
+                    # %lhs, ...)`), so the first shape token IS the lhs;
+                    # older dumps carry bare %refs -> resolve via syms.
+                    tm = _TYPE_RE.search(ops[0])
                     if tm:
                         lhs_shape = _dims(tm.group(2))
                     else:
-                        ref = first.lstrip("%")
+                        ref = ops[0].split(",")[0].strip().lstrip("%")
                         if ref in syms:
                             lhs_shape = _dims(syms[ref][1])
                 if lhs_shape is None:
@@ -281,5 +283,7 @@ def memory_stats(compiled) -> dict:
 
 def cost_stats(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per program
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0))}

@@ -71,8 +71,8 @@ class TestTripAwareFlops:
 
         c2 = jax.jit(mk(2)).lower(jnp.ones((M, M)), jnp.ones((M, M))).compile()
         c8 = jax.jit(mk(8)).lower(jnp.ones((M, M)), jnp.ones((M, M))).compile()
-        assert (c2.cost_analysis()["flops"]
-                == c8.cost_analysis()["flops"])          # XLA: same!
+        assert (cost_stats(c2)["flops"]
+                == cost_stats(c8)["flops"])              # XLA: same!
         s2 = trip_aware_stats(c2.as_text())
         s8 = trip_aware_stats(c8.as_text())
         assert s8["flops_dot"] == pytest.approx(4 * s2["flops_dot"])

@@ -107,7 +107,7 @@ class TestPodCompression:
             params = {"w": jnp.ones((16, 16)) * 0.1}
             batch = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
             err = init_error_state(params)
-            with jax.set_mesh(mesh):
+            with mesh:
                 fn = make_pod_compressed_grad_fn(loss_fn, mesh)
                 grads, loss, new_err = jax.jit(fn)(params, batch, err)
             exact = jax.grad(lambda w: loss_fn(w, batch))(params)
