@@ -2,29 +2,50 @@
 
 Closes the loop the analytical benchmarks leave open: Algorithm 1 picks an
 eviction/fragmentation plan for a skip-connection-heavy graph on a
-memory-limited device view, ``runtime/executor.py`` lowers it to a jitted
-streaming pipeline, and we report the *executed* throughput next to the
-Eq. 5/6 analytical estimates — plus the numerical distance between the
-lowered pipeline and the dense un-evicted reference (zero for lossless
-plans, ~8-bit codec error when the DSE chose BFP8).
+memory-limited device view, the runtime lowers it, and we report *executed*
+throughput next to the Eq. 5/6 estimates — for both executors:
 
-Derived fields per row:
-  exec_fps       executed frames/s (jitted, steady-state median)
-  est_fps        Eq. 6 analytical estimate from the DSE
-  est_lat_ms     Eq. 5 analytical latency estimate
-  rel_err        max relative deviation of the executed plan vs. reference
-  evicted/frag   plan decision counts
-  offchip_kbits  per-frame off-chip spill traffic (SpillReport)
+* ``sequential`` — ``runtime/executor.lower_plan``: one frame at a time,
+  stages back to back (the Eq. 5 regime);
+* ``pipelined``  — ``runtime/streamer.lower_plan_pipelined``: stages
+  overlap over a stream of microbatches, spills double-buffered (the Eq. 6
+  regime).  Enabled with ``--pipelined``.
+
+Both land in one artifact with a shared row schema (CSV on stdout via
+``common.emit``; JSON rows with ``--json PATH``):
+
+  executor        "sequential" | "pipelined"
+  model, codecs   workload + allowed eviction codecs
+  n_stages        stages in the DSE plan
+  microbatches    stream length B (1 for sequential)
+  fps_executed    measured frames/s (steady state, best of N)
+  fps_eq5         1 / sum_j(L_j)   — sequential-schedule estimate
+  fps_eq6         1 / max_j(L_j)   — pipelined-schedule estimate
+  rel_err         max relative deviation vs the dense reference
+  offchip_kbits   per-frame off-chip spill traffic (Spill/StreamReport)
+
+``L_j`` are per-stage wall-clock latencies measured stage-by-stage
+(``streamer.measured_stage_latencies``) so fps_eq5/fps_eq6 bracket the two
+schedules in the same units as fps_executed: sequential should track
+fps_eq5, pipelined should land nearer fps_eq6 (the ISSUE 2 acceptance).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import time
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (DSEConfig, build_unet_exec, build_yolo_head_exec,
                         plan_from_dse, run_dse)
 from repro.core.resources import Device
 from repro.runtime.executor import lower_plan, reference_pipeline
+from repro.runtime.streamer import (eq5_sequential_time, eq6_pipeline_time,
+                                    lower_plan_pipelined,
+                                    measured_stage_latencies)
 
 from .common import emit, timeit
 
@@ -40,10 +61,52 @@ MODELS = {
     "yolo_head_exec": (build_yolo_head_exec, (64, 32)),
 }
 
+# Two plan flavours per (model, codecs):
+#   ("output",)       one stage -> the DSE is forced into eviction and
+#                     fragmentation (the paper's spill story; pipelined
+#                     execution degenerates to a batched scan);
+#   ("pool", "conv")  multi-stage -> stage-boundary spills and something
+#                     for the pipeline to actually overlap (the Eq. 6 story).
+CUT_VARIANTS = (("output",), ("pool", "conv"))
 
-def run(smoke: bool = False) -> dict:
-    out = {}
+ROW_SCHEMA = ("executor", "model", "codecs", "n_stages", "microbatches",
+              "fps_executed", "fps_eq5", "fps_eq6", "rel_err",
+              "offchip_kbits", "evicted", "fragged")
+
+
+def _row(executor: str, model: str, codecs: tuple, plan, report,
+         fps_executed: float, fps_eq5: float, fps_eq6: float,
+         rel_err: float, microbatches: int) -> dict:
+    return {
+        "executor": executor,
+        "model": model,
+        "codecs": "+".join(codecs),
+        "n_stages": plan.n_stages,
+        "microbatches": microbatches,
+        "fps_executed": fps_executed,
+        "fps_eq5": fps_eq5,
+        "fps_eq6": fps_eq6,
+        "rel_err": rel_err,
+        "offchip_kbits": report.total_offchip_bits / 1e3,
+        "evicted": sum(1 for s in plan.streams if s.evicted),
+        "fragged": sum(1 for lp in plan.layers.values()
+                       if lp.weight_static_fraction < 1.0),
+    }
+
+
+def _emit_row(r: dict, us_per_call: float) -> None:
+    derived = " ".join(
+        f"{k}={r[k]:.4g}" if isinstance(r[k], float) else f"{k}={r[k]}"
+        for k in ROW_SCHEMA if k not in ("model", "codecs"))
+    emit(f"e2e/{r['model']}_{r['codecs']}_s{r['n_stages']}_{r['executor']}",
+         us_per_call, derived)
+
+
+def run(smoke: bool = False, pipelined: bool = False,
+        microbatches: int = 8, json_path: str | None = None) -> list[dict]:
+    rows: list[dict] = []
     models = dict(list(MODELS.items())[:1]) if smoke else MODELS
+    repeats = 3 if smoke else 5
     for name, (build, in_shape) in models.items():
         # the DSE only mutates graph design state it resets on entry, and
         # the dense reference is codec-independent: build/lower both once
@@ -51,29 +114,61 @@ def run(smoke: bool = False) -> dict:
         ref = reference_pipeline(g)
         x = jax.random.normal(jax.random.PRNGKey(0), in_shape, jnp.float32)
         yr = ref(x).block_until_ready()
-        for codecs in (("none",), ("none", "bfp8")):
+        for codecs, cut_kinds in ((c, k) for c in (("none",), ("none", "bfp8"))
+                                  for k in CUT_VARIANTS):
             res = run_dse(g, TINY_STREAM,
                           DSEConfig(batch=1, codecs=codecs, word_bits=16,
-                                    cut_kinds=("output",)))
+                                    cut_kinds=cut_kinds))
             plan = plan_from_dse(name, TINY_STREAM.name, res)
             low = lower_plan(g, plan)
             yl = low(x).block_until_ready()
             rel = float(jnp.abs(yl - yr).max() / jnp.abs(yr).max())
-            us = timeit(lambda: low(x).block_until_ready(),
-                        repeats=3 if smoke else 5, warmup=1)
-            exec_fps = 1e6 / us
-            n_ev = sum(1 for s in plan.streams if s.evicted)
-            n_fr = sum(1 for lp in plan.layers.values()
-                       if lp.weight_static_fraction < 1.0)
-            tag = "+".join(codecs)
-            out[(name, tag)] = exec_fps
-            emit(f"e2e/{name}_{tag}", us,
-                 f"exec_fps={exec_fps:.1f} est_fps={res.throughput_fps:.1f} "
-                 f"est_lat_ms={res.latency_s * 1e3:.4f} rel_err={rel:.2e} "
-                 f"evicted={n_ev} fragged={n_fr} "
-                 f"offchip_kbits={low.report.total_offchip_bits / 1e3:.1f}")
-    return out
+
+            B = microbatches
+            sx = lower_plan_pipelined(g, plan, microbatches=B)
+            lat = measured_stage_latencies(sx, x)  # compiles stage fns only
+            fps_eq5 = 1.0 / eq5_sequential_time(lat)
+            fps_eq6 = 1.0 / eq6_pipeline_time(lat)
+
+            us_seq = timeit(lambda: low(x).block_until_ready(),
+                            repeats=repeats, warmup=1)
+            rows.append(_row("sequential", name, codecs, plan, low.report,
+                             1e6 / us_seq, fps_eq5, fps_eq6, rel, 1))
+            _emit_row(rows[-1], us_seq)
+
+            if pipelined:
+                xs = jnp.broadcast_to(x, (B,) + in_shape)
+                us_stream = timeit(lambda: sx(xs).block_until_ready(),
+                                   repeats=repeats, warmup=1)
+                us_frame = us_stream / B
+                ys = np.asarray(sx(xs))
+                rel_p = float(np.abs(ys[0] - np.asarray(yr)).max()
+                              / np.abs(np.asarray(yr)).max())
+                rows.append(_row("pipelined", name, codecs, plan, sx.report,
+                                 1e6 / us_frame, fps_eq5, fps_eq6, rel_p, B))
+                _emit_row(rows[-1], us_frame)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"schema": list(ROW_SCHEMA), "rows": rows,
+                       "generated_unix": time.time(),
+                       "backend": jax.default_backend()}, f, indent=1)
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.e2e_executor")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="also run the pipelined streaming executor")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as a JSON artifact")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, pipelined=args.pipelined,
+        microbatches=args.microbatches, json_path=args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -21,6 +21,9 @@ diagnostics go to stderr, so stdout is directly machine-readable.
 Modes:
     python -m benchmarks.run            # full sweep
     python -m benchmarks.run --smoke    # CI-sized subset (CPU-friendly)
+    python -m benchmarks.run --smoke --pipelined --e2e-json out.json
+                                        # sequential vs pipelined executor
+                                        # rows in one JSON artifact (CI)
 
 The roofline section reads the dry-run artifacts in results/dryrun (run
 ``python -m repro.launch.dryrun --all`` first; checked-in results are used
@@ -38,13 +41,22 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized subset (table3 + e2e) instead of the "
                          "full sweep")
-    smoke = ap.parse_args(argv).smoke
+    ap.add_argument("--pipelined", action="store_true",
+                    help="also run the pipelined streaming executor in the "
+                         "e2e section")
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="stream length B for the pipelined executor")
+    ap.add_argument("--e2e-json", default=None, metavar="PATH",
+                    help="write the e2e rows as a JSON artifact")
+    args = ap.parse_args(argv)
+    smoke = args.smoke
     from . import (e2e_executor, fig6_ablation, fig7_compression,
                    fig8_variability, kernels_bench, roofline, table3_models,
                    table4_partitioning, table5_throughput)
     print("name,us_per_call,derived")
     table3_models.run()
-    e2e_executor.run(smoke=smoke)
+    e2e_executor.run(smoke=smoke, pipelined=args.pipelined,
+                     microbatches=args.microbatches, json_path=args.e2e_json)
     if smoke:
         return
     table4_partitioning.run()

@@ -20,6 +20,18 @@ from typing import Any
 from .dse import DSEResult
 
 
+def _known_fields(cls) -> set[str]:
+    return {f.name for f in dataclasses.fields(cls)}
+
+
+def _strict_kwargs(cls, d: dict) -> dict:
+    """Drop keys a (possibly older) dataclass does not know about, so plans
+    serialised by newer versions of the toolflow still load (forward
+    compatibility of the on-disk format)."""
+    known = _known_fields(cls)
+    return {k: v for k, v in d.items() if k in known}
+
+
 @dataclasses.dataclass
 class LayerPlan:
     name: str
@@ -48,6 +60,12 @@ class ExecutionPlan:
     microbatch: int = 1
     est_throughput_fps: float = 0.0
     est_latency_s: float = 0.0
+    # Deterministic schedule order: the graph's topological order at plan
+    # time.  Dict-insertion order of ``layers`` is an accident of how the
+    # partitioner walked the graph; the pipelined streamer needs a stable
+    # stage-internal schedule, so ``stage_layers`` sorts by this list when
+    # present (layers not in the list keep insertion order, appended last).
+    topo_order: list[str] = dataclasses.field(default_factory=list)
 
     # -- serialisation --------------------------------------------------------
     def to_json(self) -> str:
@@ -59,31 +77,44 @@ class ExecutionPlan:
 
     @staticmethod
     def from_json(s: str) -> "ExecutionPlan":
-        d = json.loads(s)
-        d["layers"] = {k: LayerPlan(**v) for k, v in d["layers"].items()}
-        d["streams"] = [StreamPlan(**v) for v in d["streams"]]
+        d = _strict_kwargs(ExecutionPlan, json.loads(s))
+        d["layers"] = {k: LayerPlan(**_strict_kwargs(LayerPlan, v))
+                       for k, v in d["layers"].items()}
+        d["streams"] = [StreamPlan(**_strict_kwargs(StreamPlan, v))
+                        for v in d["streams"]]
         return ExecutionPlan(**d)
 
+    def _order_key(self):
+        pos = {n: i for i, n in enumerate(self.topo_order)}
+        return lambda n: (pos.get(n, len(pos)),)
+
+    def ordered_layers(self) -> list[str]:
+        """All layer names in deterministic (topological) schedule order."""
+        return sorted(self.layers, key=self._order_key())
+
     def stage_layers(self, stage: int) -> list[str]:
-        return [n for n, lp in self.layers.items() if lp.stage == stage]
+        return [n for n in self.ordered_layers()
+                if self.layers[n].stage == stage]
 
 
 def plan_from_dse(model: str, device: str, res: DSEResult,
                   remat: str = "none", microbatch: int = 1) -> ExecutionPlan:
     """Project a DSEResult into an ExecutionPlan."""
     g = res.partitioning.graph
+    topo = g.topo()
+    stage_of = {n: i for i, p in enumerate(res.partitioning.parts) for n in p}
     layers: dict[str, LayerPlan] = {}
-    for stage, names in enumerate(res.partitioning.parts):
-        for n in names:
-            v = g.vertex(n)
-            layers[n] = LayerPlan(
-                name=n, stage=stage, tp_parallelism=v.par,
-                weight_static_fraction=1.0 - v.frag_ratio,
-                weight_stream_codec=v.meta.get("frag_codec", "none"),
-            )
+    for n in topo:                         # deterministic insertion order too
+        v = g.vertex(n)
+        layers[n] = LayerPlan(
+            name=n, stage=stage_of[n], tp_parallelism=v.par,
+            weight_static_fraction=1.0 - v.frag_ratio,
+            weight_stream_codec=v.meta.get("frag_codec", "none"),
+        )
     streams = [StreamPlan(e.src, e.dst, e.evicted, e.codec) for e in g.edges()]
     return ExecutionPlan(
         model=model, device=device, n_stages=res.partitioning.n,
         layers=layers, streams=streams, remat=remat, microbatch=microbatch,
         est_throughput_fps=res.throughput_fps, est_latency_s=res.latency_s,
+        topo_order=topo,
     )

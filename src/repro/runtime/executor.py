@@ -155,92 +155,92 @@ def _upsample(x: jax.Array) -> jax.Array:
     return jnp.repeat(x, 2, axis=0)
 
 
-def _bfp8_roundtrip(x: jax.Array, *, use_pallas: bool,
-                    interpret: bool) -> jax.Array:
-    """Quantise->dequantise a (m, c) stripe through the BFP8 codec."""
-    m, c = x.shape
-    c_pad = _round_up(c, BFP8_BLOCK)
-    xp = jnp.pad(x, ((0, 0), (0, c_pad - c)))
+def bfp8_spill_encode(x: jax.Array, *, use_pallas: bool,
+                      interpret: bool) -> tuple[jax.Array, jax.Array]:
+    """Encode a (m, c) stripe to (mantissas, exponents), padding the channel
+    axis to the codec block — the spill buffers that cross off-chip."""
+    c = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (0, _round_up(c, BFP8_BLOCK) - c)))
     if use_pallas:
-        man, exp = bfp8_quant(xp, block=BFP8_BLOCK, interpret=interpret)
-        out = bfp8_dequant(man, exp, block=BFP8_BLOCK, dtype=x.dtype,
+        return bfp8_quant(xp, block=BFP8_BLOCK, interpret=interpret)
+    return kref.bfp8_quant_ref(xp, block=BFP8_BLOCK)
+
+
+def bfp8_spill_decode(payload: tuple[jax.Array, jax.Array], c: int, *,
+                      use_pallas: bool, interpret: bool,
+                      dtype=jnp.float32) -> jax.Array:
+    """Decode spill buffers back to a (m, c) stripe (drops block padding)."""
+    man, exp = payload
+    if use_pallas:
+        out = bfp8_dequant(man, exp, block=BFP8_BLOCK, dtype=dtype,
                            interpret=interpret)
     else:
-        man, exp = kref.bfp8_quant_ref(xp, block=BFP8_BLOCK)
-        out = kref.bfp8_dequant_ref(man, exp, block=BFP8_BLOCK, dtype=x.dtype)
+        out = kref.bfp8_dequant_ref(man, exp, block=BFP8_BLOCK, dtype=dtype)
     return out[:, :c]
 
 
+def _bfp8_roundtrip(x: jax.Array, *, use_pallas: bool,
+                    interpret: bool) -> jax.Array:
+    """Quantise->dequantise a (m, c) stripe through the BFP8 codec.
+
+    Composed from the same encode/decode halves the pipelined streamer
+    carries between stages, so the two executors' codec numerics are one
+    implementation."""
+    payload = bfp8_spill_encode(x, use_pallas=use_pallas, interpret=interpret)
+    return bfp8_spill_decode(payload, x.shape[1], use_pallas=use_pallas,
+                             interpret=interpret, dtype=x.dtype)
+
+
 # =============================================================================
-# Lowering
+# Static plan analysis (shared by the sequential and pipelined executors)
 # =============================================================================
 
 @dataclasses.dataclass
-class LoweredPipeline:
-    """A jitted executable form of one ExecutionPlan.
+class PlanAnalysis:
+    """Everything ``lower_plan`` derives from (graph, plan) before tracing.
 
-    ``fn(params, x)`` runs the whole streaming pipeline; ``report`` is the
-    static off-chip traffic accounting the lowering derived from the plan.
+    Both executors (the sequential one below and the pipelined streamer in
+    ``runtime/streamer``) build their traced functions from this one object,
+    so spill routing, weight splits, and traffic accounting cannot drift
+    between them.
     """
-    fn: Callable[[dict, jax.Array], jax.Array]
-    params: dict[str, jax.Array]
-    report: SpillReport
-    plan: ExecutionPlan | None
-    graph_name: str
+    topo: list[str]                               # deterministic vertex order
+    out_shape: dict[str, tuple[int, int]]         # per-vertex (m, c)
+    spills: list[SpillRecord]
+    spill_fn: dict[tuple[str, str], Callable]     # per spilled edge numerics
+    frac: dict[str, float]                        # weight_static_fraction
+    stage_of: dict[str, int]                      # vertex -> stage index
+    streamed_weight_bits: int
+    static_weight_bits: int
+    use_pallas: bool
+    interpret: bool
+    in_vertex: str
+    in_shape: tuple[int, int]
 
-    def __call__(self, x: jax.Array) -> jax.Array:
-        return self.fn(self.params, x)
+    @property
+    def n_stages(self) -> int:
+        return max(self.stage_of.values(), default=0) + 1
 
-
-def _make_offchip_hop() -> Callable[[jax.Array], jax.Array]:
-    """Best-effort real off-chip placement: route the value through host
-    memory when the backend exposes a host memory kind (TPU); identity
-    elsewhere.  Called once at lowering time, not per trace."""
-    try:
-        from jax._src.sharding_impls import TransferToMemoryKind
-        kinds = {m.kind for m in jax.devices()[0].addressable_memories()}
-        if "pinned_host" in kinds and jax.default_backend() == "tpu":
-            def hop(x: jax.Array) -> jax.Array:
-                y = jax.device_put(x, TransferToMemoryKind("pinned_host"))
-                return jax.device_put(y, TransferToMemoryKind("device"))
-            return hop
-    except Exception:       # pragma: no cover - jax-internal API moved
-        pass
-    return lambda x: x
+    def report(self) -> SpillReport:
+        return SpillReport(spills=list(self.spills),
+                           streamed_weight_bits=self.streamed_weight_bits,
+                           static_weight_bits=self.static_weight_bits)
 
 
-def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
-               kernel_mode: str = "auto", seed: int = 0,
-               interpret: bool | None = None) -> LoweredPipeline:
-    """Lower ``plan`` over executable graph ``g`` to a jitted pipeline.
-
-    plan=None lowers the dense reference: no eviction, no fragmentation,
-    one stage — the numerical baseline every plan must match (lossless
-    codecs) or approximate (BFP8).
-
-    kernel_mode: "pallas" dispatches fragmented matmuls and the BFP8 codec
-    to the Pallas kernels (interpret-mode off TPU), "reference" uses the
-    pure-jnp oracles, "auto" picks pallas on TPU and reference elsewhere.
-    """
-    if kernel_mode not in ("auto", "pallas", "reference"):
-        raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
-    on_tpu = jax.default_backend() == "tpu"
-    use_pallas = kernel_mode == "pallas" or (kernel_mode == "auto" and on_tpu)
-    if interpret is None:
-        interpret = not on_tpu
-
+def analyze_plan(g: Graph, plan: ExecutionPlan | None, *,
+                 use_pallas: bool, interpret: bool) -> PlanAnalysis:
+    """Static analysis: shapes, spill records/functions, weight traffic."""
     layers = plan.layers if plan is not None else {}
     stream_map = ({(s.src, s.dst): s for s in plan.streams}
                   if plan is not None else {})
-    hop = _make_offchip_hop()
 
-    # -- static analysis: shapes, spills, weight traffic ----------------------
     topo = g.topo()
     out_shape: dict[str, tuple[int, int]] = {}
     for name in topo:
-        v = g.vertex(name)
         spec = _exec_spec(g, name)
         out_shape[name] = (spec.get("m_out", spec["m"]), spec["cout"])
+
+    stage_of = {n: (layers[n].stage if n in layers else 0) for n in topo}
 
     spills: list[SpillRecord] = []
     spill_fn: dict[tuple[str, str], Callable] = {}
@@ -249,8 +249,7 @@ def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
         s = stream_map.get((u, w))
         evicted = bool(s.evicted) if s is not None else False
         codec = s.codec if s is not None else "none"
-        cross_stage = (layers.get(u) is not None and layers.get(w) is not None
-                       and layers[u].stage != layers[w].stage)
+        cross_stage = stage_of[u] != stage_of[w]
         if not (evicted or cross_stage):
             continue
         m, c = out_shape[u]
@@ -290,65 +289,139 @@ def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
         static_bits += int(round(f * wbits))
         streamed_bits += int(round((1.0 - f) * wbits))
 
-    # -- build the traced pipeline -------------------------------------------
     in_vertex = next(n for n in topo if g.vertex(n).kind == "input")
-    in_shape = out_shape[in_vertex]
+    return PlanAnalysis(
+        topo=topo, out_shape=out_shape, spills=spills, spill_fn=spill_fn,
+        frac=frac, stage_of=stage_of, streamed_weight_bits=streamed_bits,
+        static_weight_bits=static_bits, use_pallas=use_pallas,
+        interpret=interpret, in_vertex=in_vertex,
+        in_shape=out_shape[in_vertex])
 
+
+def apply_vertex(v, ins: list[jax.Array], params: dict, x: jax.Array | None,
+                 analysis: PlanAnalysis) -> jax.Array:
+    """Execute one vertex's semantics — the single source of truth for what
+    each op kind *does*, shared by both executors."""
+    if v.kind == "input":
+        assert x is not None, "input vertex fed without a graph input"
+        return x
+    if v.kind in WEIGHT_KINDS:
+        h = ins[0]
+        f = analysis.frac.get(v.name, 1.0)
+        if f >= 1.0 or not analysis.use_pallas:
+            # un-fragmented (or oracle mode): plain dot — same math
+            return jnp.dot(h, params[v.name],
+                           preferred_element_type=jnp.float32).astype(h.dtype)
+        return streamed_matmul_padded(h, params[v.name], static_fraction=f,
+                                      interpret=analysis.interpret)
+    if v.kind == "act":
+        return jax.nn.relu(ins[0])
+    if v.kind == "pool":
+        return _pool(ins[0])
+    if v.kind == "upsample":
+        return _upsample(ins[0])
+    if v.kind == "add":
+        return functools.reduce(jnp.add, ins)
+    if v.kind == "concat":
+        return jnp.concatenate(ins, axis=1)
+    if v.kind == "output":
+        return jnp.concatenate([i.ravel() for i in ins])
+    raise ValueError(f"op kind {v.kind!r} has no executable lowering")
+
+
+# =============================================================================
+# Lowering
+# =============================================================================
+
+@dataclasses.dataclass
+class LoweredPipeline:
+    """A jitted executable form of one ExecutionPlan.
+
+    ``fn(params, x)`` runs the whole streaming pipeline; ``report`` is the
+    static off-chip traffic accounting the lowering derived from the plan.
+    """
+    fn: Callable[[dict, jax.Array], jax.Array]
+    params: dict[str, jax.Array]
+    report: SpillReport
+    plan: ExecutionPlan | None
+    graph_name: str
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.fn(self.params, x)
+
+
+def resolve_kernel_mode(kernel_mode: str,
+                        interpret: bool | None) -> tuple[bool, bool]:
+    """Kernel-dispatch policy shared by both executors: returns
+    (use_pallas, interpret) for a requested mode on the current backend."""
+    if kernel_mode not in ("auto", "pallas", "reference"):
+        raise ValueError(f"unknown kernel_mode {kernel_mode!r}")
+    on_tpu = jax.default_backend() == "tpu"
+    use_pallas = kernel_mode == "pallas" or (kernel_mode == "auto" and on_tpu)
+    if interpret is None:
+        interpret = not on_tpu
+    return use_pallas, interpret
+
+
+def _make_offchip_hop() -> Callable[[jax.Array], jax.Array]:
+    """Best-effort real off-chip placement: route the value through host
+    memory when the backend exposes a host memory kind (TPU); identity
+    elsewhere.  Called once at lowering time, not per trace."""
+    try:
+        from jax._src.sharding_impls import TransferToMemoryKind
+        kinds = {m.kind for m in jax.devices()[0].addressable_memories()}
+        if "pinned_host" in kinds and jax.default_backend() == "tpu":
+            def hop(x: jax.Array) -> jax.Array:
+                y = jax.device_put(x, TransferToMemoryKind("pinned_host"))
+                return jax.device_put(y, TransferToMemoryKind("device"))
+            return hop
+    except Exception:       # pragma: no cover - jax-internal API moved
+        pass
+    return lambda x: x
+
+
+def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
+               kernel_mode: str = "auto", seed: int = 0,
+               interpret: bool | None = None) -> LoweredPipeline:
+    """Lower ``plan`` over executable graph ``g`` to a jitted pipeline.
+
+    plan=None lowers the dense reference: no eviction, no fragmentation,
+    one stage — the numerical baseline every plan must match (lossless
+    codecs) or approximate (BFP8).
+
+    kernel_mode: "pallas" dispatches fragmented matmuls and the BFP8 codec
+    to the Pallas kernels (interpret-mode off TPU), "reference" uses the
+    pure-jnp oracles, "auto" picks pallas on TPU and reference elsewhere.
+    """
+    use_pallas, interpret = resolve_kernel_mode(kernel_mode, interpret)
+    hop = _make_offchip_hop()
+    an = analyze_plan(g, plan, use_pallas=use_pallas, interpret=interpret)
+
+    # -- build the traced pipeline -------------------------------------------
     def forward(params: dict, x: jax.Array) -> jax.Array:
-        if tuple(x.shape) != in_shape:
+        if tuple(x.shape) != an.in_shape:
             # every op downstream is shape-agnostic on the position axis, so
             # a wrong-m input would execute silently while the SpillReport
             # described the declared shapes — refuse at trace time instead
             raise ValueError(
                 f"input shape {tuple(x.shape)} does not match the graph's "
-                f"input spec {in_shape} for {g.name!r}")
+                f"input spec {an.in_shape} for {g.name!r}")
         values: dict[str, jax.Array] = {}
-        for name in topo:
+        for name in an.topo:
             v = g.vertex(name)
             ins = []
             for e in g.in_edges(name):      # predecessor order = operand order
                 val = values[e.src]
-                fn = spill_fn.get((e.src, name))
+                fn = an.spill_fn.get((e.src, name))
                 if fn is not None:
                     val = hop(fn(val))
                 ins.append(val)
-            if v.kind == "input":
-                y = x
-            elif v.kind in ("conv", "matmul", "deconv"):
-                h = ins[0]
-                f = frac.get(name, 1.0)
-                if f >= 1.0 or not use_pallas:
-                    # un-fragmented (or oracle mode): plain dot — same math
-                    y = jnp.dot(h, params[name],
-                                preferred_element_type=jnp.float32
-                                ).astype(h.dtype)
-                else:
-                    y = streamed_matmul_padded(h, params[name],
-                                               static_fraction=f,
-                                               interpret=interpret)
-            elif v.kind == "act":
-                y = jax.nn.relu(ins[0])
-            elif v.kind == "pool":
-                y = _pool(ins[0])
-            elif v.kind == "upsample":
-                y = _upsample(ins[0])
-            elif v.kind == "add":
-                y = functools.reduce(jnp.add, ins)
-            elif v.kind == "concat":
-                y = jnp.concatenate(ins, axis=1)
-            elif v.kind == "output":
-                y = jnp.concatenate([i.ravel() for i in ins])
-            else:
-                raise ValueError(
-                    f"op kind {v.kind!r} has no executable lowering")
-            values[name] = y
-        return values[topo[-1]]
+            values[name] = apply_vertex(v, ins, params, x, an)
+        return values[an.topo[-1]]
 
-    report = SpillReport(spills=spills, streamed_weight_bits=streamed_bits,
-                         static_weight_bits=static_bits)
     return LoweredPipeline(fn=jax.jit(forward),
                            params=init_params(g, seed=seed),
-                           report=report, plan=plan, graph_name=g.name)
+                           report=an.report(), plan=plan, graph_name=g.name)
 
 
 def reference_pipeline(g: Graph, *, seed: int = 0) -> LoweredPipeline:

@@ -1,0 +1,30 @@
+"""Pipelined streaming executor — overlap partition stages, double-buffer
+off-chip spills.
+
+The sequential executor (``runtime/executor.py``) runs a plan's stages one
+after another on one input at a time, so every evicted stream pays its full
+off-chip round-trip on the critical path and the executed time tracks
+Eq. 5's sequential sum.  This subsystem runs the *same*
+``core.plan.ExecutionPlan`` as a coarse software pipeline over a stream of
+microbatches — stage ``j`` processes microbatch ``b`` while stage ``j+1``
+processes ``b-1`` — so steady-state throughput tracks Eq. 6's
+``1/max_j(L_j)`` slowest-stage model instead.
+
+Modules
+-------
+``schedule``   1F1B fill/steady/drain schedule + per-stage latency model
+               hook (Eq. 5 vs Eq. 6 estimates, occupancy/stall accounting).
+``queues``     bounded inter-stage ring buffers holding the spilled/encoded
+               representation, capacity from Eq. 1's ``d_b'``.
+``pipeline``   the jitted multi-microbatch step (``jax.lax.scan`` over a
+               stage-state carry on one device; ``shard_map`` ring pipeline
+               when devices >= stages) and the ``StreamReport``.
+"""
+from .pipeline import (StreamingExecutor, StreamReport, lower_plan_pipelined,
+                       measured_stage_latencies)
+from .queues import QueueSpec, RingBuffer, build_queues, queue_specs
+from .schedule import (PipelineSchedule, StageTask, build_schedule,
+                       eq5_sequential_time, eq6_pipeline_time,
+                       simulate_schedule, stage_latencies)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,481 @@
+"""The jitted pipelined executor: stages overlap over a microbatch stream.
+
+``lower_plan_pipelined`` consumes the same ``core.plan.ExecutionPlan`` (and
+the same per-vertex lowering, via ``runtime.executor.analyze_plan`` /
+``apply_vertex``) as the sequential executor, but runs the plan's stages as
+a software 1F1B pipeline over ``B`` microbatches:
+
+* **single device** — one ``jax.lax.scan`` over ``T = B + S - 1`` ticks.
+  The carry holds, per stage-crossing edge, a shift register of the
+  *encoded* spill (BFP8 mantissas + shared exponents for ``bfp8`` streams,
+  raw words otherwise): stage ``i`` pushes microbatch ``b``'s encoded spill
+  while stage ``i+1`` decodes microbatch ``b-1`` from the other end — the
+  paper's two DMA-burst FIFOs as a scan carry.  Every stage reads the
+  previous tick's carry, so within a tick all stages are data-independent
+  (XLA can fuse/overlap them) and the spill round-trip is off the critical
+  path of its own microbatch.
+
+* **devices >= stages** — a ``shard_map`` ring pipeline: each device owns
+  one stage, crossing edges live in per-device transit slots that
+  ``ppermute`` one hop per tick, so a spill produced on stage ``i`` arrives
+  at stage ``k`` exactly ``k - i`` ticks later while both devices compute.
+
+Numerics are identical to the sequential executor per microbatch: the same
+codec functions run in the same composition (pad -> quantise -> dequantise
+-> slice), only *when* they run changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ...core.graph import Graph
+from ...core.plan import ExecutionPlan
+from ...kernels.streamed_matmul import _round_up
+from ..executor import (BFP8_BLOCK, PlanAnalysis, SpillReport,
+                        _make_offchip_hop, analyze_plan, apply_vertex,
+                        bfp8_spill_decode, bfp8_spill_encode, init_params,
+                        resolve_kernel_mode)
+from . import queues as Q
+from . import schedule as SCH
+
+
+# =============================================================================
+# StreamReport
+# =============================================================================
+
+@dataclasses.dataclass
+class StreamReport(SpillReport):
+    """SpillReport plus the pipeline's schedule/occupancy accounting.
+
+    The spill records (and therefore all bit volumes) are the *same objects*
+    the sequential executor would report for this plan — per microbatch,
+    bit-exact — with the pipeline view stacked on top: per-stage occupancy
+    and stall (bubble) counts, per-queue high-water marks, and the Eq. 5 vs
+    Eq. 6 frame-time estimates from the stage latency model, so benchmarks
+    can show which stage sets ``max_j(L_j)``.
+    """
+    n_stages: int = 1
+    microbatches: int = 1
+    ticks: int = 1
+    placement: str = "interleave"
+    stage_occupancy: list[float] = dataclasses.field(default_factory=list)
+    stage_stalls: list[int] = dataclasses.field(default_factory=list)
+    stage_latency: list[float] = dataclasses.field(default_factory=list)
+    queue_stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def eq5_time(self) -> float:
+        """Sequential frame time: sum of stage latencies (Eq. 5)."""
+        return SCH.eq5_sequential_time(self.stage_latency)
+
+    @property
+    def eq6_time(self) -> float:
+        """Pipelined steady-state frame time: slowest stage (Eq. 6)."""
+        return SCH.eq6_pipeline_time(self.stage_latency)
+
+    @property
+    def bottleneck_stage(self) -> int:
+        return max(range(len(self.stage_latency)),
+                   key=lambda j: self.stage_latency[j])
+
+    def summary(self) -> dict:
+        out = super().summary()
+        out.update({
+            "n_stages": self.n_stages,
+            "microbatches": self.microbatches,
+            "ticks": self.ticks,
+            "placement": self.placement,
+            "stage_occupancy": self.stage_occupancy,
+            "stage_stalls": self.stage_stalls,
+            "eq5_time": self.eq5_time,
+            "eq6_time": self.eq6_time,
+            "bottleneck_stage": self.bottleneck_stage,
+        })
+        return out
+
+
+# =============================================================================
+# Encoded carry codecs (the queue payload)
+# =============================================================================
+
+def _codec_pair(codec: str, shape: tuple[int, int], *, use_pallas: bool,
+                interpret: bool, dtype=jnp.float32):
+    """(encode, decode, zero_template) for one crossing edge's payload.
+
+    ``bfp8``: the carry holds the actual spill buffers (int8 mantissas +
+    per-block int8 shared exponents), built from the *same* encode/decode
+    halves the sequential executor composes into ``_bfp8_roundtrip`` — the
+    two executors' codec numerics are one implementation.  Everything else
+    carries raw words (lossless codecs shrink bits, not numbers).
+    """
+    m, c = shape
+    if codec == "bfp8":
+        enc = functools.partial(bfp8_spill_encode, use_pallas=use_pallas,
+                                interpret=interpret)
+        dec = functools.partial(bfp8_spill_decode, c=c, use_pallas=use_pallas,
+                                interpret=interpret, dtype=dtype)
+        c_pad = _round_up(c, BFP8_BLOCK)
+        zero = (jnp.zeros((m, c_pad), jnp.int8),
+                jnp.zeros((m, c_pad // BFP8_BLOCK), jnp.int8))
+        return enc, dec, zero
+    return (lambda x: x), (lambda p: p), jnp.zeros((m, c), dtype)
+
+
+# =============================================================================
+# Stage splitting
+# =============================================================================
+
+def _stage_names(an: PlanAnalysis) -> list[list[str]]:
+    """Vertices per stage, in graph topological order (the deterministic
+    schedule the streamer needs — plan.stage_layers agrees when the plan
+    carries its topo_order)."""
+    n = an.n_stages
+    names: list[list[str]] = [[] for _ in range(n)]
+    for v in an.topo:
+        names[an.stage_of[v]].append(v)
+    for j, ns in enumerate(names):
+        if not ns:
+            raise ValueError(f"stage {j} is empty — plan stages must be "
+                             f"contiguous 0..{n - 1}")
+    return names
+
+
+def _crossing_edges(g: Graph, an: PlanAnalysis) -> list[tuple[str, str]]:
+    out = []
+    for e in g.edges():
+        d = an.stage_of[e.dst] - an.stage_of[e.src]
+        if d < 0:
+            raise ValueError(f"edge {(e.src, e.dst)} goes backwards across "
+                             f"stages ({an.stage_of[e.src]} -> "
+                             f"{an.stage_of[e.dst]})")
+        if d > 0:
+            out.append((e.src, e.dst))
+    return out
+
+
+def _make_stage_fns(g: Graph, an: PlanAnalysis, names: list[list[str]],
+                    crossing: list[tuple[str, str]], hop, enc):
+    """Per-stage callables with a uniform signature.
+
+    ``fn_j(params, x, reads) -> (produced, y)`` where ``reads`` maps every
+    crossing edge to its decoded value (stage ``j`` only touches the ones it
+    consumes), ``produced`` maps every crossing edge to an encoded payload
+    (zeros template for edges other stages produce — uniform pytrees keep
+    ``lax.switch`` branches legal), and ``y`` is the graph output (zeros
+    except on the last stage).
+    """
+    S = an.n_stages
+    out_vertex = an.topo[-1]
+    out_len = sum(an.out_shape[e.src][0] * an.out_shape[e.src][1]
+                  for e in g.in_edges(out_vertex))
+    produced_by = {e: an.stage_of[e[0]] for e in crossing}
+
+    def make(j: int):
+        mine = set(names[j])
+
+        def fn(params, x, reads):
+            values: dict[str, jax.Array] = {}
+            for name in names[j]:
+                v = g.vertex(name)
+                ins = []
+                for e in g.in_edges(name):
+                    if e.src in mine:
+                        val = values[e.src]
+                        sfn = an.spill_fn.get((e.src, name))
+                        if sfn is not None:   # same-stage eviction round-trip
+                            val = hop(sfn(val))
+                    else:
+                        val = reads[(e.src, name)]
+                    ins.append(val)
+                values[name] = apply_vertex(v, ins, params, x, an)
+            produced = {}
+            for e in crossing:
+                if produced_by[e] == j:
+                    payload = enc[e](values[e[0]])
+                    produced[e] = jax.tree.map(hop, payload)
+                else:
+                    produced[e] = None       # filled with zeros by caller
+            y = (values[out_vertex] if out_vertex in mine
+                 else jnp.zeros((out_len,), jnp.float32))
+            return produced, y
+        return fn
+
+    return [make(j) for j in range(S)], out_len
+
+
+# =============================================================================
+# Lowered streaming pipeline
+# =============================================================================
+
+@dataclasses.dataclass
+class StreamingExecutor:
+    """A jitted pipelined form of one ExecutionPlan.
+
+    ``fn(params, xs)`` maps a ``(B, m, c)`` microbatch stream to ``(B, L)``
+    outputs, bit-for-bit the outputs of running the sequential executor on
+    each microbatch independently (modulo nothing: the same codecs run in
+    the same composition).  ``stage_fns`` are the individually-jitted
+    per-stage callables — the sequential decomposition the pipeline
+    overlaps — used by :func:`measured_stage_latencies`.
+    """
+    fn: Callable[[dict, jax.Array], jax.Array]
+    params: dict[str, jax.Array]
+    report: StreamReport
+    plan: ExecutionPlan | None
+    graph_name: str
+    n_stages: int
+    microbatches: int
+    placement: str
+    stage_fns: list[Callable]
+    _zero_reads: Callable[[], dict]
+    _decoders: dict
+    _crossing: list[tuple[str, str]]
+
+    def __call__(self, xs: jax.Array) -> jax.Array:
+        return self.fn(self.params, xs)
+
+    def zero_reads(self) -> dict:
+        """A zeros-filled decoded-reads template (for driving stage_fns)."""
+        return self._zero_reads()
+
+
+def lower_plan_pipelined(g: Graph, plan: ExecutionPlan, *,
+                         microbatches: int | None = None,
+                         kernel_mode: str = "auto", seed: int = 0,
+                         interpret: bool | None = None,
+                         placement: str = "auto") -> StreamingExecutor:
+    """Lower ``plan`` over ``g`` to a pipelined multi-microbatch executor.
+
+    microbatches: length ``B`` of the input stream the jitted step is traced
+    for (defaults to ``plan.microbatch``, floored at 1).
+    placement: "interleave" (single-device scan), "shard_map" (one stage per
+    device), or "auto" (shard_map when ``devices >= stages > 1``).
+    """
+    use_pallas, interpret = resolve_kernel_mode(kernel_mode, interpret)
+    B = int(microbatches if microbatches is not None
+            else max(plan.microbatch, 1))
+    if B < 1:
+        raise ValueError(f"need >= 1 microbatch, got {B}")
+
+    an = analyze_plan(g, plan, use_pallas=use_pallas, interpret=interpret)
+    S = an.n_stages
+    names = _stage_names(an)
+    crossing = _crossing_edges(g, an)
+    sched = SCH.build_schedule(S, B)
+    hop = _make_offchip_hop()
+
+    if placement not in ("auto", "interleave", "shard_map"):
+        raise ValueError(f"unknown placement {placement!r}")
+    if placement == "auto":
+        placement = ("shard_map" if S > 1 and len(jax.devices()) >= S
+                     else "interleave")
+    if placement == "shard_map" and len(jax.devices()) < S:
+        raise ValueError(f"shard_map placement needs >= {S} devices, "
+                         f"have {len(jax.devices())}")
+
+    stream_map = {(s.src, s.dst): s for s in plan.streams}
+    codec_of = {e: (stream_map[e].codec
+                    if e in stream_map and stream_map[e].evicted else "none")
+                for e in crossing}
+    enc: dict = {}
+    dec: dict = {}
+    zeros: dict = {}
+    for e in crossing:
+        enc[e], dec[e], zeros[e] = _codec_pair(
+            codec_of[e], an.out_shape[e[0]], use_pallas=use_pallas,
+            interpret=interpret)
+
+    stage_fns, out_len = _make_stage_fns(g, an, names, crossing, hop, enc)
+    delay = {e: an.stage_of[e[1]] - an.stage_of[e[0]] for e in crossing}
+
+    def fill_zeros(produced: dict) -> dict:
+        return {e: (zeros[e] if produced[e] is None else produced[e])
+                for e in crossing}
+
+    # -- single-device interleave: lax.scan over the tick axis ---------------
+    def build_interleave():
+        def step(params, xs):
+            _check_stream_shape(xs)
+
+            def tick(carry, t):
+                x_t = jax.lax.dynamic_index_in_dim(
+                    xs, jnp.clip(t, 0, B - 1), axis=0, keepdims=False)
+                reads = {e: dec[e](jax.tree.map(lambda b: b[-1], carry[e]))
+                         for e in crossing}
+                produced: dict = {}
+                y = jnp.zeros((out_len,), jnp.float32)
+                for j in range(S):
+                    prod_j, y_j = stage_fns[j](params,
+                                               x_t if j == 0 else None, reads)
+                    for e in crossing:
+                        if prod_j[e] is not None:
+                            produced[e] = prod_j[e]
+                    if j == S - 1:
+                        y = y_j
+                new_carry = {
+                    e: jax.tree.map(
+                        lambda buf, new: jnp.concatenate(
+                            [new[None], buf[:-1]], axis=0),
+                        carry[e], produced[e])
+                    for e in crossing}
+                return new_carry, y
+
+            carry0 = {e: jax.tree.map(
+                lambda z, d=delay[e]: jnp.zeros((d,) + z.shape, z.dtype),
+                zeros[e]) for e in crossing}
+            _, ys = jax.lax.scan(tick, carry0, jnp.arange(sched.ticks))
+            return ys[S - 1:]
+        return jax.jit(step)
+
+    # -- multi-device ring: shard_map, one stage per device ------------------
+    def build_shard_map():
+        import numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        mesh = Mesh(np.array(jax.devices()[:S]), ("stage",))
+        perm = [(i, (i + 1) % S) for i in range(S)]
+
+        def body(params, xs):
+            j = jax.lax.axis_index("stage")
+
+            def tick(carry, t):
+                x_t = jax.lax.dynamic_index_in_dim(
+                    xs, jnp.clip(t, 0, B - 1), axis=0, keepdims=False)
+                reads = {e: dec[e](jax.tree.map(lambda b: b[0], carry[e]))
+                         for e in crossing}
+
+                def branch(jj):
+                    def f(params, x_t, reads):
+                        prod, y = stage_fns[jj](
+                            params, x_t if jj == 0 else None, reads)
+                        return fill_zeros(prod), y
+                    return f
+                produced, y = jax.lax.switch(
+                    j, [branch(jj) for jj in range(S)], params, x_t, reads)
+                new_carry = {}
+                for e in crossing:
+                    i_prod = an.stage_of[e[0]]
+                    slot = jax.tree.map(
+                        lambda old, new: jnp.where(j == i_prod, new[None],
+                                                   old),
+                        carry[e], produced[e])
+                    new_carry[e] = jax.tree.map(
+                        lambda s: jax.lax.ppermute(s, "stage", perm), slot)
+                return new_carry, y
+
+            carry0 = {e: jax.tree.map(lambda z: z[None], zeros[e])
+                      for e in crossing}
+            _, ys = jax.lax.scan(tick, carry0, jnp.arange(sched.ticks))
+            # only the last stage computed real outputs; share them
+            ys = jnp.where(j == S - 1, ys, 0.0)
+            return jax.lax.psum(ys, "stage")
+
+        smap = _shard_map_compat(body, mesh, in_specs=(P(), P()),
+                                 out_specs=P())
+
+        def step(params, xs):
+            _check_stream_shape(xs)
+            ys = smap(params, xs)
+            return ys[S - 1:]
+        return jax.jit(step)
+
+    def _check_stream_shape(xs):
+        if tuple(xs.shape) != (B,) + an.in_shape:
+            raise ValueError(
+                f"microbatch stream shape {tuple(xs.shape)} does not match "
+                f"the lowered ({B}, *{an.in_shape}) for {g.name!r}")
+
+    fn = build_shard_map() if placement == "shard_map" else build_interleave()
+
+    # -- report: schedule + bounded-queue accounting --------------------------
+    lat = SCH.stage_latencies(g, plan)
+    specs = Q.queue_specs(g, an.stage_of, an.out_shape, codec_of)
+    sim = SCH.simulate_schedule(
+        sched, Q.build_queues(specs),
+        producer_stage={e: an.stage_of[e[0]] for e in specs},
+        consumer_stage={e: an.stage_of[e[1]] for e in specs})
+    base = an.report()
+    report = StreamReport(
+        spills=base.spills, streamed_weight_bits=base.streamed_weight_bits,
+        static_weight_bits=base.static_weight_bits,
+        n_stages=S, microbatches=B, ticks=sched.ticks, placement=placement,
+        stage_occupancy=sim["stage_occupancy"],
+        stage_stalls=sim["stage_stalls"], stage_latency=lat,
+        queue_stats={f"{u}->{w}": st
+                     for (u, w), st in sim["queues"].items()})
+
+    params = init_params(g, seed=seed)
+    jitted_stage_fns = [jax.jit(functools.partial(_stage_call, f))
+                        for f in stage_fns]
+
+    def zero_reads():
+        return {e: dec[e](zeros[e]) for e in crossing}
+
+    return StreamingExecutor(
+        fn=fn, params=params, report=report, plan=plan, graph_name=g.name,
+        n_stages=S, microbatches=B, placement=placement,
+        stage_fns=jitted_stage_fns, _zero_reads=zero_reads, _decoders=dec,
+        _crossing=crossing)
+
+
+def _stage_call(stage_fn, params, x, reads):
+    """Uniform jit wrapper: drop the None placeholders so each stage's
+    jitted signature only contains arrays."""
+    prod, y = stage_fn(params, x, reads)
+    return {e: p for e, p in prod.items() if p is not None}, y
+
+
+def _shard_map_compat(f, mesh, *, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):                       # jax >= 0.7
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+# =============================================================================
+# Measured per-stage latencies (the Eq. 5/6 hook, wall-clock edition)
+# =============================================================================
+
+def measured_stage_latencies(sx: StreamingExecutor, x: jax.Array, *,
+                             repeats: int = 5, warmup: int = 2
+                             ) -> list[float]:
+    """Wall-clock seconds per stage, dispatched stage-by-stage.
+
+    This is what the *sequential* schedule pays per frame: each stage is a
+    separate device dispatch fed through the decoded reads.  Feeding stage
+    ``j+1`` with stage ``j``'s real outputs keeps shapes and codec work
+    identical to the pipeline's steady state.  Plug the result into the
+    Eq. 5/6 estimators to place measured pipeline throughput between the
+    sequential sum and the slowest-stage bound.
+    """
+    import time
+
+    reads = sx.zero_reads()
+    lat: list[float] = []
+    for j, fn in enumerate(sx.stage_fns):
+        x_j = x if j == 0 else None
+
+        def call():
+            prod, y = fn(sx.params, x_j, reads)
+            jax.block_until_ready((prod, y))
+            return prod, y
+
+        for _ in range(warmup):
+            prod, _ = call()
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            prod, _ = call()
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        lat.append(times[len(times) // 2])
+        # thread this stage's real (decoded) outputs into the next reads
+        for e, payload in prod.items():
+            reads[e] = sx._decoders[e](payload)
+    return lat

@@ -1,0 +1,119 @@
+"""Bounded inter-stage ring buffers for the spilled/encoded representation.
+
+On hardware, an evicted stream crosses between pipeline stages through two
+DMA-burst FIFOs of total depth ``d_b'`` (Eq. 1) plus an off-chip spill
+region; the FIFOs are what lets the spill of microbatch ``b`` overlap with
+compute on microbatch ``b`` instead of blocking the stage (the
+memory-efficient dataflow queues of Petrica et al.).  Here each cross-stage
+edge of a plan gets a :class:`RingBuffer` whose capacity *in microbatch
+entries* derives from the same ``d_b'`` word budget — never below the two
+DMA FIFOs' double buffer.  The jitted pipeline mirrors these queues as scan
+carries; the Python objects are used by ``schedule.simulate_schedule`` to
+account occupancy and stalls for the :class:`~.pipeline.StreamReport`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+from ...core.eviction import DMA_FIFO_DEPTH
+from ...core.graph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueSpec:
+    """Sizing of one inter-stage queue.
+
+    ``capacity_words`` is Eq. 1's ``d_b' = 2 * DMA_FIFO_DEPTH`` word budget;
+    ``capacity`` is that budget expressed in whole microbatch entries,
+    floored at 2 (the two DMA-burst FIFOs always double-buffer one entry in
+    flight while the next is being encoded).
+    """
+    src: str
+    dst: str
+    words_per_entry: int          # one encoded microbatch stripe
+    word_bits: int
+    codec: str
+    delay: int                    # consumer stage - producer stage (>= 1)
+    capacity_words: float
+    capacity: int
+
+    @property
+    def entry_bits(self) -> int:
+        return self.words_per_entry * self.word_bits
+
+
+class RingBuffer:
+    """Bounded FIFO with occupancy high-water and stall accounting.
+
+    ``push`` against a full ring and ``pop`` from an empty one are counted
+    as stalls — the events that would backpressure (resp. starve) a
+    hardware pipeline stage.  The push still lands (the accounting model
+    must keep the schedule moving), so stall counts are diagnostics, not
+    flow control.
+    """
+
+    def __init__(self, capacity: int) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._q: collections.deque = collections.deque()
+        self.high_water = 0
+        self.push_stalls = 0
+        self.pop_stalls = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._q)
+
+    def push(self, item) -> bool:
+        """Append; returns False (and counts a stall) if the ring was full."""
+        ok = len(self._q) < self.capacity
+        if not ok:
+            self.push_stalls += 1
+        self._q.append(item)
+        self.high_water = max(self.high_water, len(self._q))
+        return ok
+
+    def pop(self):
+        if not self._q:
+            self.pop_stalls += 1
+            return None
+        return self._q.popleft()
+
+    def stats(self) -> dict:
+        return {"capacity": self.capacity, "occupancy": len(self._q),
+                "high_water": self.high_water,
+                "push_stalls": self.push_stalls,
+                "pop_stalls": self.pop_stalls}
+
+
+def queue_specs(g: Graph, stage_of: dict[str, int],
+                out_shape: dict[str, tuple[int, int]],
+                codec_of: dict[tuple[str, str], str] | None = None,
+                fifo_depth: float = DMA_FIFO_DEPTH) -> dict[tuple[str, str],
+                                                            QueueSpec]:
+    """One :class:`QueueSpec` per stage-crossing edge of the plan."""
+    codec_of = codec_of or {}
+    specs: dict[tuple[str, str], QueueSpec] = {}
+    for e in g.edges():
+        d = stage_of[e.dst] - stage_of[e.src]
+        if d <= 0:
+            continue
+        m, c = out_shape[e.src]
+        d_b_prime = 2.0 * fifo_depth                      # Eq. 1
+        cap = max(2, math.floor(d_b_prime / max(m * c, 1)))
+        specs[(e.src, e.dst)] = QueueSpec(
+            src=e.src, dst=e.dst, words_per_entry=m * c,
+            word_bits=e.word_bits, codec=codec_of.get((e.src, e.dst), "none"),
+            delay=d, capacity_words=d_b_prime, capacity=cap)
+    return specs
+
+
+def build_queues(specs: dict[tuple[str, str], QueueSpec]
+                 ) -> dict[tuple[str, str], RingBuffer]:
+    return {e: RingBuffer(s.capacity) for e, s in specs.items()}

@@ -7,12 +7,20 @@ per-request, and decode advances all active slots in lockstep.
 
 The paper's activation eviction shows up here as **KV-page eviction**: when
 a slot's cache page goes cold (its request finished) or the configured
-budget is exceeded, pages are evicted to the host in BFP8 (the §V-A codec)
-and restored on demand — Eq. 1/2's on-chip <-> off-chip trade with HBM as
-"on-chip" and host DRAM as "off-chip".
+residency budget is exceeded, pages are evicted to the host in BFP8 (the
+§V-A codec) and restored on demand — Eq. 1/2's on-chip <-> off-chip trade
+with HBM as "on-chip" and host DRAM as "off-chip".  ``resident_limit``
+keeps the most recently finished requests' pages parked in HBM
+(restoration is exact and free); older page-sets spill to the host
+oldest-first, so the eviction *order* is the retirement order.
+
+``GraphStreamServer`` is the CNN-side counterpart: a batched front-end
+that packs submitted frames into fixed-length microbatch streams and runs
+them through the pipelined streaming executor (``runtime/streamer``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 from typing import Callable
@@ -50,7 +58,7 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
                  s_max: int = 256, dtype=jnp.float32,
-                 evict_to_host: bool = False,
+                 evict_to_host: bool = False, resident_limit: int = 0,
                  sampler: Callable | None = None):
         self.cfg = cfg
         self.params = params
@@ -58,6 +66,9 @@ class ServingEngine:
         self.s_max = s_max
         self.dtype = dtype
         self.evict_to_host = evict_to_host
+        # retired page-sets allowed to stay parked in HBM before the oldest
+        # spills to the host (0 = spill immediately on retire)
+        self.resident_limit = resident_limit
         self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
         self.cache = init_cache(cfg, max_batch, s_max, dtype=dtype)
         self.slots: list[Request | None] = [None] * max_batch
@@ -65,6 +76,9 @@ class ServingEngine:
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.stats = EngineStats()
         self.host_store: dict[int, dict] = {}    # rid -> evicted pages
+        # rid -> raw pages still in HBM, in retirement order (FIFO eviction)
+        self.resident_store: "collections.OrderedDict[int, dict]" = \
+            collections.OrderedDict()
         self._next_rid = 0
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, cfg, t, pos, c))
@@ -105,37 +119,64 @@ class ServingEngine:
     def _retire(self, slot: int) -> None:
         r = self.slots[slot]
         if r is not None and self.evict_to_host:
-            self._evict_slot(slot, r.rid)
+            pages = self._snapshot_slot(slot)
+            if self.resident_limit > 0:
+                self.resident_store[r.rid] = pages
+                while len(self.resident_store) > self.resident_limit:
+                    # budget exceeded: spill the OLDEST retired page-set
+                    old_rid, old_pages = self.resident_store.popitem(last=False)
+                    self._host_evict(old_rid, old_pages)
+            else:
+                self._host_evict(r.rid, pages)
         self.slots[slot] = None
         self.pos[slot] = 0
 
     # -- KV eviction (paper Eq. 1/2 at the HBM<->host level) -------------------------
-    def _evict_slot(self, slot: int, rid: int) -> None:
+    def _snapshot_slot(self, slot: int) -> dict:
+        """Copy one slot's KV pages out of the decode cache (still in HBM)."""
         pages = {}
 
-        def evict_leaf(path, c):
+        def snap_leaf(path, c):
             name = "/".join(str(getattr(p, "key", p)) for p in path)
-            page = np.asarray(c[:, slot], np.float32)
+            pages[name] = c[:, slot]
+            return c
+        jax.tree_util.tree_map_with_path(snap_leaf, self.cache)
+        return pages
+
+    def _host_evict(self, rid: int, pages: dict) -> None:
+        """BFP8-encode a page-set across the HBM -> host boundary."""
+        enc_pages = {}
+        for name, page in pages.items():
+            page = np.asarray(page, np.float32)
             enc = bfp8_encode(page)
             self.stats.evicted_bytes_raw += page.size * 2      # bf16 words
             self.stats.evicted_bytes_compressed += (
                 enc.mantissas.size + enc.exponents.size)
-            pages[name] = enc
-            return c
-        jax.tree_util.tree_map_with_path(evict_leaf, self.cache)
-        self.host_store[rid] = pages
-        self.stats.evicted_pages += len(pages)
+            enc_pages[name] = enc
+        self.host_store[rid] = enc_pages
+        self.stats.evicted_pages += len(enc_pages)
 
     def restore_request(self, rid: int, slot: int) -> None:
-        """Bring an evicted request's pages back into HBM (resumption)."""
-        pages = self.host_store.pop(rid)
-        flat = {}
+        """Bring an evicted request's pages back into HBM (resumption).
+
+        Pages still parked under ``resident_limit`` restore exactly; pages
+        that crossed to the host come back through the BFP8 codec.
+        """
+        resident = self.resident_store.pop(rid, None)
+
+        def page_for(name, c):
+            if resident is not None:
+                return np.asarray(resident[name])
+            return bfp8_decode(self.host_store[rid][name])
+
         def restore_leaf(path, c):
             name = "/".join(str(getattr(p, "key", p)) for p in path)
-            page = bfp8_decode(pages[name]).astype(np.asarray(c).dtype)
+            page = np.asarray(page_for(name, c)).astype(np.asarray(c).dtype)
             self.stats.restored_pages += 1
             return c.at[:, slot].set(jnp.asarray(page))
         self.cache = jax.tree_util.tree_map_with_path(restore_leaf, self.cache)
+        if resident is None:
+            del self.host_store[rid]
 
     # -- decode loop ---------------------------------------------------------------
     def step(self) -> int:
@@ -168,3 +209,73 @@ class ServingEngine:
         for _ in range(max_steps):
             if self.step() == 0 and self.queue.empty():
                 return
+
+
+# =============================================================================
+# Batched exec-graph front-end feeding the pipelined streamer
+# =============================================================================
+
+@dataclasses.dataclass
+class StreamServerStats:
+    frames_in: int = 0
+    frames_out: int = 0
+    streams_run: int = 0
+    padded_frames: int = 0       # bubble frames added to fill the last stream
+
+
+class GraphStreamServer:
+    """Packs submitted frames into microbatch streams for the streamer.
+
+    The pipelined executor is traced for a fixed stream length ``B``
+    (`runtime/streamer`): this front-end queues individual frames, cuts the
+    queue into length-``B`` streams (zero-padding the tail — padding frames
+    are executed as pipeline bubbles and dropped), runs each stream through
+    the one jitted multi-microbatch step, and hands results back by ticket.
+    """
+
+    def __init__(self, g, plan, *, microbatches: int = 8, **lower_kw):
+        from repro.runtime.streamer import lower_plan_pipelined
+        self.executor = lower_plan_pipelined(
+            g, plan, microbatches=microbatches, **lower_kw)
+        self.microbatches = microbatches
+        self.stats = StreamServerStats()
+        self._pending: list[tuple[int, np.ndarray]] = []
+        self._results: dict[int, np.ndarray] = {}
+        self._next_ticket = 0
+
+    @property
+    def report(self):
+        return self.executor.report
+
+    def submit(self, frame: np.ndarray) -> int:
+        """Queue one (positions, channels) frame; returns a ticket id."""
+        self._pending.append((self._next_ticket,
+                              np.asarray(frame, np.float32)))
+        self._next_ticket += 1
+        self.stats.frames_in += 1
+        return self._next_ticket - 1
+
+    def flush(self) -> dict[int, np.ndarray]:
+        """Run all queued frames; returns {ticket: output} for this flush."""
+        out: dict[int, np.ndarray] = {}
+        B = self.microbatches
+        while self._pending:
+            chunk, self._pending = self._pending[:B], self._pending[B:]
+            xs = np.stack([f for _, f in chunk])
+            pad = B - len(chunk)
+            if pad:
+                xs = np.concatenate(
+                    [xs, np.zeros((pad,) + xs.shape[1:], np.float32)])
+                self.stats.padded_frames += pad
+            ys = np.asarray(self.executor(jnp.asarray(xs)))
+            self.stats.streams_run += 1
+            for (ticket, _), y in zip(chunk, ys):
+                out[ticket] = y
+                self.stats.frames_out += 1
+        self._results.update(out)
+        return out
+
+    def result(self, ticket: int) -> np.ndarray:
+        """Claim a flushed output (one-shot: the server does not keep
+        delivered results, so a long-lived front-end stays bounded)."""
+        return self._results.pop(ticket)

@@ -83,6 +83,74 @@ def test_latency_monotone_in_batch(batch):
     assert t2 >= t1
 
 
+# =============================================================================
+# BFP8 codec properties — the padded path the streamer's queues exercise
+# =============================================================================
+
+def _bfp8_block_error_bound(x_flat: np.ndarray, block: int = 32) -> np.ndarray:
+    """Per-element worst-case |err|: half the block scale.
+
+    scale = 2^(ceil(log2 amax) - 6) <= amax * 2^-5, and |x| <= amax <= 2^exp
+    means no mantissa clipping, so rounding error <= scale/2 <= amax/64."""
+    pad = (-x_flat.size) % block
+    fp = np.pad(x_flat, (0, pad)).reshape(-1, block)
+    amax = np.abs(fp).max(axis=1)
+    return np.repeat(amax / 64.0 + 1e-12, block)[: x_flat.size]
+
+
+@given(st.integers(1, 6), st.integers(1, 97), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_bfp8_roundtrip_error_bound_and_shape_any_channels(rows, cols, seed):
+    """encode->decode keeps the shape for ANY (rows, cols) — channel counts
+    that are not multiples of the block included — and every element lands
+    within the shared-exponent quantisation bound."""
+    from repro.core.compression import bfp8_decode, bfp8_encode
+
+    rng = np.random.default_rng(seed)
+    x = (10.0 * rng.standard_normal((rows, cols))).astype(np.float32)
+    enc = bfp8_encode(x, block=32)
+    dec = bfp8_decode(enc)
+    assert dec.shape == x.shape and dec.dtype == np.float32
+    err = np.abs(dec - x).ravel()
+    assert np.all(err <= _bfp8_block_error_bound(x.ravel()))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_bfp8_all_zero_blocks_roundtrip_exactly(seed):
+    rng = np.random.default_rng(seed)
+    from repro.core.compression import bfp8_decode, bfp8_encode
+    x = np.zeros((int(rng.integers(1, 5)), int(rng.integers(1, 70))),
+                 np.float32)
+    np.testing.assert_array_equal(bfp8_decode(bfp8_encode(x, block=32)), x)
+
+
+@given(st.integers(1, 8), st.integers(1, 95), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_jax_padded_roundtrip_matches_numpy_codec(m, c, seed):
+    """The in-pipeline jax round-trip (pad channels to the block, quantise
+    row-blockwise) is shape-invariant for non-block-multiple channel counts
+    and agrees with the numpy codec applied to the padded stripe — the
+    exact path a streamer queue payload takes."""
+    from repro.core.compression import bfp8_decode, bfp8_encode
+    from repro.runtime.executor import _bfp8_roundtrip
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, c)).astype(np.float32)
+    got = np.asarray(_bfp8_roundtrip(jnp.asarray(x), use_pallas=False,
+                                     interpret=True))
+    assert got.shape == x.shape
+    c_pad = ((c + 31) // 32) * 32
+    xp = np.pad(x, ((0, 0), (0, c_pad - c)))
+    want = bfp8_decode(bfp8_encode(xp, block=32))[:, :c]
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+    # the padded path still honours the per-block error bound row by row
+    for r in range(m):
+        err = np.abs(got[r] - x[r])
+        assert np.all(err <= _bfp8_block_error_bound(xp[r])[:c])
+
+
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
 @settings(max_examples=15, deadline=None)
 def test_buffer_depths_nonnegative_any_dag(seed, width):
