@@ -28,6 +28,13 @@ Both land in one artifact with a shared row schema (CSV on stdout via
 (``streamer.measured_stage_latencies``) so fps_eq5/fps_eq6 bracket the two
 schedules in the same units as fps_executed: sequential should track
 fps_eq5, pipelined should land nearer fps_eq6 (the ISSUE 2 acceptance).
+
+``--autotune`` runs the closed loop instead (``repro.optim.autotune``): the
+default DSE plan seeds an SA search whose every candidate is *executed*
+through the pipelined streamer, and the candidate trajectory lands as
+``autotune/...`` CSV rows (schema ``AUTOTUNE_SCHEMA``) plus a JSON artifact
+(``--autotune-json``) with per-candidate predicted-vs-measured fps and the
+latency-model calibration report.
 """
 from __future__ import annotations
 
@@ -39,9 +46,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DSEConfig, build_unet_exec, build_yolo_head_exec,
+from repro.core import (DSEConfig, EXEC_MODELS, exec_input_shape, get_model,
                         plan_from_dse, run_dse)
 from repro.core.resources import Device
+from repro.optim.autotune import AutotuneConfig, autotune
 from repro.runtime.executor import lower_plan, reference_pipeline
 from repro.runtime.streamer import (eq5_sequential_time, eq6_pipeline_time,
                                     lower_plan_pipelined,
@@ -50,16 +58,16 @@ from repro.runtime.streamer import (eq5_sequential_time, eq6_pipeline_time,
 from .common import emit, timeit
 
 # A deliberately memory-starved streaming-device view: small enough that
-# unet_exec/yolo_head_exec cannot hold their skip buffers + weights
-# on-chip, so Algorithm 1 is forced into eviction and fragmentation.
+# the exec graphs cannot hold their skip buffers + weights on-chip, so
+# Algorithm 1 is forced into eviction and fragmentation.
 TINY_STREAM = Device("tiny_stream", compute_units=4096,
                      onchip_bits=300_000, offchip_gbps=64.0,
                      freq_mhz=500.0, reconfig_s=0.0)
 
-MODELS = {
-    "unet_exec": (build_unet_exec, (64, 32)),
-    "yolo_head_exec": (build_yolo_head_exec, (64, 32)),
-}
+# All three paper topologies in executable form, via the one registry
+# (core.builders.EXEC_MODELS); input shapes come from the graphs' own
+# exec specs, not a parallel table.
+MODEL_NAMES = tuple(EXEC_MODELS)
 
 # Two plan flavours per (model, codecs):
 #   ("output",)       one stage -> the DSE is forced into eviction and
@@ -94,23 +102,28 @@ def _row(executor: str, model: str, codecs: tuple, plan, report,
     }
 
 
-def _emit_row(r: dict, us_per_call: float) -> None:
-    derived = " ".join(
+def _derived(r: dict, schema: tuple, exclude: tuple) -> str:
+    """key=value derived-metrics string shared by every CSV row family."""
+    return " ".join(
         f"{k}={r[k]:.4g}" if isinstance(r[k], float) else f"{k}={r[k]}"
-        for k in ROW_SCHEMA if k not in ("model", "codecs"))
+        for k in schema if k not in exclude)
+
+
+def _emit_row(r: dict, us_per_call: float) -> None:
     emit(f"e2e/{r['model']}_{r['codecs']}_s{r['n_stages']}_{r['executor']}",
-         us_per_call, derived)
+         us_per_call, _derived(r, ROW_SCHEMA, ("model", "codecs")))
 
 
 def run(smoke: bool = False, pipelined: bool = False,
         microbatches: int = 8, json_path: str | None = None) -> list[dict]:
     rows: list[dict] = []
-    models = dict(list(MODELS.items())[:1]) if smoke else MODELS
+    names = MODEL_NAMES[:1] if smoke else MODEL_NAMES
     repeats = 3 if smoke else 5
-    for name, (build, in_shape) in models.items():
+    for name in names:
         # the DSE only mutates graph design state it resets on entry, and
         # the dense reference is codec-independent: build/lower both once
-        g = build()
+        g = get_model(name, EXEC_MODELS)()
+        in_shape = exec_input_shape(g)
         ref = reference_pipeline(g)
         x = jax.random.normal(jax.random.PRNGKey(0), in_shape, jnp.float32)
         yr = ref(x).block_until_ready()
@@ -156,6 +169,57 @@ def run(smoke: bool = False, pipelined: bool = False,
     return rows
 
 
+# =============================================================================
+# Closed-loop autotune mode (--autotune)
+# =============================================================================
+
+# the per-candidate trajectory row schema ("model" + AutotuneResult
+# .trajectory_rows()); one CSV line per candidate under autotune/<model>/
+AUTOTUNE_SCHEMA = ("model", "candidate", "move", "accepted", "best_so_far",
+                   "n_stages", "evicted", "fragged", "fps_measured",
+                   "fps_eq6_pre", "fps_eq6_cal")
+
+# smoke = the ISSUE 3 acceptance pair: UNet + the hardest memory-wall case
+AUTOTUNE_SMOKE_MODELS = ("unet_exec", "x3d_exec")
+
+
+def run_autotune(smoke: bool = False, microbatches: int = 8,
+                 candidates: int | None = None,
+                 json_path: str | None = None) -> dict:
+    """Run the measured-in-the-loop autotuner per model; emit the candidate
+    trajectory as CSV rows and (optionally) one JSON artifact."""
+    names = AUTOTUNE_SMOKE_MODELS if smoke else MODEL_NAMES
+    cfg = AutotuneConfig(
+        n_candidates=candidates or (8 if smoke else 16),
+        microbatches=microbatches,
+        repeats=2 if smoke else 3,
+        kernel_mode="auto")
+    out = {"schema": list(AUTOTUNE_SCHEMA), "rows": [], "summaries": {}}
+    for name in names:
+        g = get_model(name, EXEC_MODELS)()
+        res = autotune(g, TINY_STREAM, cfg)
+        for r in res.trajectory_rows():
+            row = {"model": name, **r}
+            out["rows"].append(row)
+            emit(f"autotune/{name}/cand{row['candidate']}",
+                 1e6 / max(row["fps_measured"], 1e-30),
+                 _derived(row, AUTOTUNE_SCHEMA, ("model", "candidate")))
+        s = res.summary()
+        out["summaries"][name] = s
+        emit(f"autotune/{name}/best", 1e6 / max(res.best_fps, 1e-30),
+             f"baseline_fps={res.baseline_fps:.4g} "
+             f"best_fps={res.best_fps:.4g} speedup={s['speedup']:.4g} "
+             f"pre_err={res.calibration.pre_err:.4g} "
+             f"post_err={res.calibration.post_err:.4g} "
+             f"calibrated={res.calibration.improved}")
+    if json_path:
+        out["generated_unix"] = time.time()
+        out["backend"] = jax.default_backend()
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(prog="benchmarks.e2e_executor")
     ap.add_argument("--smoke", action="store_true")
@@ -164,8 +228,20 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--microbatches", type=int, default=8)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows as a JSON artifact")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the closed-loop autotuner instead of the "
+                         "fixed DSE-plan sweep")
+    ap.add_argument("--candidates", type=int, default=None,
+                    help="autotune candidate budget (default 8 smoke / 16)")
+    ap.add_argument("--autotune-json", default=None, metavar="PATH",
+                    help="write the autotune trajectory as a JSON artifact")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
+    if args.autotune:
+        run_autotune(smoke=args.smoke, microbatches=args.microbatches,
+                     candidates=args.candidates,
+                     json_path=args.autotune_json)
+        return
     run(smoke=args.smoke, pipelined=args.pipelined,
         microbatches=args.microbatches, json_path=args.json)
 

@@ -7,8 +7,9 @@ CSV output schema (one line per benchmark point, written to stdout):
 
   name          ``<section>/<point>`` — section matches the paper artefact
                 (``table3``, ``table4``, ``table5``, ``fig6``, ``fig7``,
-                ``fig8``, ``kernels``, ``roofline``) or ``e2e`` for the
-                executed-pipeline benchmark.
+                ``fig8``, ``kernels``, ``roofline``), ``e2e`` for the
+                executed-pipeline benchmark, or ``autotune`` for the
+                closed-loop candidate trajectory (``--autotune``).
   us_per_call   median wall-clock microseconds of the timed callable
                 (DSE solve, kernel invocation, or jitted pipeline step;
                 0 where the point is analytic only).
@@ -24,6 +25,10 @@ Modes:
     python -m benchmarks.run --smoke --pipelined --e2e-json out.json
                                         # sequential vs pipelined executor
                                         # rows in one JSON artifact (CI)
+    python -m benchmarks.run --smoke --autotune --autotune-json tune.json
+                                        # + the closed-loop autotuner's
+                                        # candidate trajectory (autotune/...
+                                        # rows, schema in e2e_executor.py)
 
 The roofline section reads the dry-run artifacts in results/dryrun (run
 ``python -m repro.launch.dryrun --all`` first; checked-in results are used
@@ -48,6 +53,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="stream length B for the pipelined executor")
     ap.add_argument("--e2e-json", default=None, metavar="PATH",
                     help="write the e2e rows as a JSON artifact")
+    ap.add_argument("--autotune", action="store_true",
+                    help="also run the closed-loop autotuner in the e2e "
+                         "section (candidate-trajectory rows)")
+    ap.add_argument("--autotune-json", default=None, metavar="PATH",
+                    help="write the autotune trajectory as a JSON artifact")
     args = ap.parse_args(argv)
     smoke = args.smoke
     from . import (e2e_executor, fig6_ablation, fig7_compression,
@@ -57,6 +67,10 @@ def main(argv: list[str] | None = None) -> None:
     table3_models.run()
     e2e_executor.run(smoke=smoke, pipelined=args.pipelined,
                      microbatches=args.microbatches, json_path=args.e2e_json)
+    if args.autotune:
+        e2e_executor.run_autotune(smoke=smoke,
+                                  microbatches=args.microbatches,
+                                  json_path=args.autotune_json)
     if smoke:
         return
     table4_partitioning.run()

@@ -1,33 +1,45 @@
-"""Quickstart: run the SMOF DSE on the paper's UNet and print the design.
+"""Quickstart: run the SMOF DSE on a paper model and print the design.
 
     PYTHONPATH=src python examples/quickstart.py [--device u200] [--batch 1]
+    PYTHONPATH=src python examples/quickstart.py --model unet_exec --execute
 
 Reproduces the paper's Fig. 4 design point (UNet on U200: ~21 fps, single
 partition, weights mostly on-chip) and shows the decision vector the DSE
-produced — which edges were evicted, which layers fragmented.
+produced — which edges were evicted, which layers fragmented.  Models are
+looked up through the one registry (``repro.core.get_model``): paper-scale
+cost-model graphs (``unet``, ``yolov8n``, ...) are costed only, while the
+``*_exec`` graphs (``unet_exec``, ``yolo_head_exec``, ``x3d_exec``) can
+additionally be *executed* with ``--execute`` — the plan is lowered to a
+real JAX pipeline and its off-chip traffic report printed.
 """
 import argparse
 
-from repro.core import (DSEConfig, build_unet, get_device, plan_from_dse,
-                        run_dse)
+from repro.core import (DSEConfig, EXEC_MODELS, PAPER_MODELS, exec_input_shape,
+                        get_device, get_model, plan_from_dse, run_dse)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--device", default="u200")
     ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--model", default="unet",
+                    help=f"one of: {', '.join(sorted({**EXEC_MODELS, **PAPER_MODELS}))}")
+    ap.add_argument("--execute", action="store_true",
+                    help="lower the plan to a JAX pipeline and run it "
+                         "(needs a *_exec model)")
     args = ap.parse_args()
 
     dev = get_device(args.device)
-    g = build_unet()
-    print(f"UNet: {g.total_macs() / 1e9:.1f} GMACs, "
+    g = get_model(args.model)()
+    print(f"{args.model}: {g.total_macs() / 1e9:.1f} GMACs, "
           f"{g.total_weight_words() / 1e6:.1f} M params, "
           f"{g.g.number_of_nodes()} vertices")
     res = run_dse(g, dev, DSEConfig(batch=args.batch,
                                     cut_kinds=("conv", "pool"),
                                     codecs=("none", "rle"), word_bits=8))
     s = res.summary()
-    print(f"\nDSE result on {dev.name} (paper Fig. 4: 21 fps / 47 ms):")
+    print(f"\nDSE result on {dev.name} (paper Fig. 4 for unet/u200: "
+          f"21 fps / 47 ms):")
     print(f"  throughput : {s['throughput_fps']:.2f} fps")
     print(f"  latency    : {s['latency_s'] * 1e3:.1f} ms")
     print(f"  partitions : {s['n_partitions']}")
@@ -37,9 +49,23 @@ def main() -> None:
     for e in res.partitioning.graph.edges():
         if e.evicted:
             print(f"    evicted: {e.src} -> {e.dst}  codec={e.codec}")
-    plan = plan_from_dse("unet", dev.name, res)
+    plan = plan_from_dse(args.model, dev.name, res)
     print(f"\nExecutionPlan: {plan.n_stages} stage(s), "
           f"{len(plan.layers)} layers; est {plan.est_throughput_fps:.2f} fps")
+
+    if args.execute:
+        if args.model not in EXEC_MODELS:
+            raise SystemExit(f"--execute needs a *_exec model, not "
+                             f"{args.model!r} (see EXEC_MODELS)")
+        import jax
+        import jax.numpy as jnp
+        from repro.runtime.executor import lower_plan
+        low = lower_plan(g, plan)
+        x = jax.random.normal(jax.random.PRNGKey(0), exec_input_shape(g),
+                              jnp.float32)
+        y = low(x)
+        print(f"\nexecuted: output shape {tuple(y.shape)}")
+        print(f"off-chip traffic: {low.report.summary()}")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ itself notes "optimised UNet architectures tailored to the HW design
 from __future__ import annotations
 
 import math
+from typing import Callable
 
 from .graph import Graph, Vertex
 
@@ -304,6 +305,16 @@ class _XB(_B):
             "cin": c, "cout": cout or c, "m": m, "m_out": m_out or m}
         return name
 
+    def xdwconv(self, prev: str, c: int, m: int, taps: int = 3) -> str:
+        """Depthwise temporal conv: per-channel mixing of ``taps`` adjacent
+        positions (the 3x1x1 temporal kernel of X3D's 3D blocks, with the
+        frame axis flattened into the position axis)."""
+        name, _ = self.conv(prev, c, c, (m,), k=taps, kind="dwconv",
+                            groups=c)
+        self.g.vertex(name).meta["exec"] = {"cin": c, "cout": c, "m": m,
+                                            "taps": taps}
+        return name
+
 
 def build_unet_exec(positions: int = 64, cin: int = 32, base: int = 32,
                     levels: int = 3, n_classes: int = 32) -> Graph:
@@ -399,9 +410,70 @@ def build_yolo_head_exec(positions: int = 64,
     return g
 
 
+def build_x3d_exec(positions: int = 64, cin: int = 32,
+                   widths: tuple[int, ...] = (32, 64), depth: int = 2,
+                   expansion: int = 2, n_classes: int = 32) -> Graph:
+    """X3D-style temporal residual network, executable form.
+
+    The position axis is the flattened (frames, spatial) extent; each stage
+    is a chain of mobile-inverted-bottleneck blocks — 1x1 expand, depthwise
+    *temporal* conv (``dwconv`` mixes adjacent positions per channel),
+    squeeze-excitation (global pool -> bottleneck -> broadcast ``mul``), 1x1
+    project — with residual adds.  Two long-buffer topologies for eviction
+    to attack: the SE side branches re-converge after the whole excitation
+    chain, and the stem output rides a temporal-feature-bank skip across
+    every stage to a final concat (the deepest synchronisation buffer, like
+    UNet's encoder->decoder skips but over the time axis).
+
+    Channels stay multiples of the BFP8 block (32) so evicted streams hit
+    the compile-time ``c_bar`` exactly.
+    """
+    assert positions % (2 ** (len(widths) - 1)) == 0
+    g = Graph("x3d_exec")
+    b = _XB(g, word_bits=16, weight_bits=16)
+    m = positions
+    inp = b.xsimple(None, "input", cin, m)
+    # stem: 1x1 channel mix + temporal dwconv
+    prev = b.xconv(inp, cin, widths[0], m)
+    prev = b.xdwconv(prev, widths[0], m)
+    stem = prev = b.xsimple(prev, "act", widths[0], m)
+    c = widths[0]
+    for si, w in enumerate(widths):
+        if si > 0:                               # downsample between stages
+            prev = b.xsimple(prev, "pool", c, m, m_out=m // 2)
+            m //= 2
+        mid = w * expansion
+        for blk in range(depth):
+            res = prev
+            h = b.xconv(prev, c, mid, m)
+            h = b.xsimple(h, "act", mid, m)
+            h = b.xdwconv(h, mid, m)
+            if blk % 2 == 0:                     # SE on alternate blocks
+                se = b.xsimple(h, "pool", mid, m, m_out=1)      # global pool
+                se = b.xconv(se, mid, 32, 1)
+                se = b.xsimple(se, "act", 32, 1)
+                se = b.xconv(se, 32, mid, 1)
+                h = b.xsimple([h, se], "mul", mid, m)           # broadcast
+            h = b.xconv(h, mid, w, m)
+            prev = b.xsimple([res, h], "add", w, m) if c == w else h
+            c = w
+    # temporal feature bank: the stem output skips every stage, pooled down
+    # to the final temporal resolution, and fuses by concat
+    bank = stem
+    bm = positions
+    while bm > m:
+        bank = b.xsimple(bank, "pool", widths[0], bm, m_out=bm // 2)
+        bm //= 2
+    prev = b.xsimple([bank, prev], "concat", widths[0] + c, m)
+    prev = b.xconv(prev, widths[0] + c, n_classes, m)
+    b.xsimple(prev, "output", n_classes, m)
+    return g
+
+
 EXEC_MODELS = {
     "unet_exec": build_unet_exec,
     "yolo_head_exec": build_yolo_head_exec,
+    "x3d_exec": build_x3d_exec,
 }
 
 
@@ -411,6 +483,34 @@ PAPER_MODELS = {
     "yolov8n": build_yolov8n,
     "x3d_m": build_x3d_m,
 }
+
+
+def get_model(name: str, registry: dict | None = None) -> Callable[..., Graph]:
+    """The one registry lookup: executable (``*_exec``) and paper-scale
+    cost-model builders by name, with a helpful error.
+
+    ``registry`` narrows the search to one family (``EXEC_MODELS`` /
+    ``PAPER_MODELS``); by default both are searched, exec first.
+    """
+    spaces = [registry] if registry is not None else [EXEC_MODELS, PAPER_MODELS]
+    for space in spaces:
+        if name in space:
+            return space[name]
+    known = sorted(set().union(*spaces))
+    raise KeyError(f"unknown model {name!r}; known models: {', '.join(known)}")
+
+
+def exec_input_shape(g: Graph) -> tuple[int, int]:
+    """The (positions, channels) input stripe shape of an executable graph."""
+    for v in g.vertices():
+        if v.kind == "input":
+            spec = v.meta.get("exec")
+            if spec is None:
+                raise ValueError(
+                    f"graph {g.name!r} has no executable input spec — use a "
+                    f"build_*_exec builder (see EXEC_MODELS)")
+            return (spec["m"], spec["cin"])
+    raise ValueError(f"graph {g.name!r} has no input vertex")
 
 # Table III reference values (MACs in G, params in M) for validation.
 TABLE3 = {

@@ -28,7 +28,7 @@ import networkx as nx
 OP_KINDS = (
     "input", "output",
     "conv", "dwconv", "deconv", "pool", "upsample", "act", "norm",
-    "add", "concat", "split", "matmul", "attention", "kv_append",
+    "add", "mul", "concat", "split", "matmul", "attention", "kv_append",
     "router", "expert", "ssm_scan", "embed", "reshape",
 )
 WEIGHTY = {"conv", "dwconv", "deconv", "matmul", "expert", "embed", "norm", "ssm_scan"}

@@ -1,0 +1,422 @@
+"""Closed-loop DSE autotuner: measure plans through the streaming executors.
+
+``core.dse.run_dse`` ranks designs with the *analytical* Eq. 5/Eq. 6 stage
+latency model — cycles at the device's nominal frequency.  H2PIPE's lesson
+(arXiv 2408.09209) is that such a search is only trustworthy once the
+latency model is calibrated against the real pipeline.  This module closes
+that loop:
+
+1. **seed** — Algorithm 1 produces the default plan (the baseline);
+2. **perturb** — SA-style moves mutate the plan genome, mirroring the
+   knobs ``run_dse``'s allocator owns: stage split points
+   (split / merge), the eviction edge set (evict / unevict, deep-buffer
+   edges first, codec per ``AutotuneConfig.codecs``), and per-layer weight
+   fragmentation ratios (frag, ±``frag_step``);
+3. **measure** — every candidate is lowered by
+   ``runtime.streamer.lower_plan_pipelined`` and executed on a real
+   microbatch stream; steady-state fps is recorded per candidate (plus
+   per-stage wall-clock latencies for accepted ones, as a diagnostic);
+4. **calibrate** — in steady state one pipeline tick costs the slowest
+   stage (Eq. 6), so a least-squares fit of each candidate's measured
+   seconds-per-frame against its analytic ``eq6`` cycles yields
+   ``s_per_cycle``, turning the ``schedule.stage_latencies`` model into a
+   calibrated predictor (:func:`calibrated_latency_hook`); the
+   :class:`CalibrationReport` quantifies prediction error before/after;
+5. **re-rank** — the trajectory carries predicted-vs-measured fps per
+   candidate, and the best *measured* plan wins (the seed is candidate 0,
+   so the winner is never worse than the default DSE plan).
+
+Measurement is injectable (``measure_fps`` / ``measure_stages``) so tests
+can drive the whole loop with a deterministic stub clock.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import json
+import math
+import random
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.builders import exec_input_shape
+from repro.core.dse import DSEConfig, run_dse
+from repro.core.graph import Graph
+from repro.core.pipeline import initiation_interval
+from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan, plan_from_dse
+from repro.core.resources import Device
+from repro.runtime.executor import WEIGHT_KINDS
+from repro.runtime.streamer import (StreamingExecutor, eq5_sequential_time,
+                                    eq6_pipeline_time,
+                                    lower_plan_pipelined,
+                                    measured_stage_latencies, stage_latencies)
+
+MOVES = ("split", "merge", "evict", "unevict", "frag")
+
+
+@dataclasses.dataclass
+class AutotuneConfig:
+    """Knobs of the measured-in-the-loop search.
+
+    ``n_candidates`` counts *evaluated* plans including the seed; every
+    candidate costs one pipelined lowering (a jit trace) plus measurement,
+    so smoke configs keep it small.  ``dse`` configures the seed plan's
+    Algorithm 1 run (default: eviction+fragmentation-friendly settings at
+    16-bit words).
+    """
+    n_candidates: int = 12
+    microbatches: int = 8
+    seed: int = 0
+    init_temperature: float = 0.2     # SA temperature, relative fps units
+    cooling: float = 0.85
+    codecs: tuple[str, ...] = ("bfp8",)
+    frag_step: float = 0.125
+    min_static_fraction: float = 0.25
+    max_stages: int = 6
+    repeats: int = 3
+    warmup: int = 1
+    kernel_mode: str = "auto"
+    dse: DSEConfig | None = None
+
+
+@dataclasses.dataclass
+class CandidateRecord:
+    """Predicted-vs-measured bookkeeping for one evaluated plan."""
+    index: int
+    move: str                  # "seed" or the SA move that produced it
+    accepted: bool             # became the SA current point
+    n_stages: int
+    n_evicted: int
+    n_fragged: int
+    fps_measured: float        # steady-state frames/s through the streamer
+    eq5_cycles: float          # analytic sequential frame time (cycles)
+    eq6_cycles: float          # analytic slowest-stage frame time (cycles)
+    stage_cycles: list[float]  # analytic L_j
+    # measured L_j wall clock, stage-by-stage dispatch — a per-stage
+    # diagnostic recorded for accepted candidates only (dispatch overhead
+    # the fused pipeline amortises makes it unsuitable for the tick fit)
+    stage_seconds: list[float] = dataclasses.field(default_factory=list)
+    fps_eq6_pre: float = 0.0   # Eq. 6 at nominal frequency (uncalibrated)
+    fps_eq6_cal: float = 0.0   # Eq. 6 with the fitted s_per_cycle
+    best_so_far: bool = False
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    """Fit of the analytic stage-latency model to measured tick times.
+
+    In steady state one pipeline tick costs the slowest stage — Eq. 6 —
+    so ``s_per_cycle`` is the least-squares (through-origin) scale mapping
+    each candidate's analytic ``eq6_cycles`` to its *measured* per-frame
+    (per-tick) seconds through the streamer.  ``pre_err`` / ``post_err``
+    are ``|log(t_pred / t_meas)|`` of the winning plan's Eq. 6 frame time
+    before calibration (cycles at ``freq_mhz``) and after (cycles x
+    ``s_per_cycle``); the closed loop is working when
+    ``post_err < pre_err``.
+    """
+    s_per_cycle: float
+    n_points: int
+    freq_mhz: float
+    pre_err: float
+    post_err: float
+
+    @property
+    def improved(self) -> bool:
+        return self.post_err < self.pre_err
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self) | {"improved": self.improved}
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    model: str
+    device: str
+    best_plan: ExecutionPlan
+    best_fps: float            # measured, pipelined
+    baseline_fps: float        # measured fps of the seed (default DSE) plan
+    trajectory: list[CandidateRecord]
+    calibration: CalibrationReport
+    microbatches: int
+
+    def summary(self) -> dict:
+        return {
+            "model": self.model,
+            "device": self.device,
+            "candidates": len(self.trajectory),
+            "microbatches": self.microbatches,
+            "baseline_fps": self.baseline_fps,
+            "best_fps": self.best_fps,
+            "speedup": self.best_fps / max(self.baseline_fps, 1e-30),
+            "best_n_stages": self.best_plan.n_stages,
+            "best_evicted": sum(1 for s in self.best_plan.streams if s.evicted),
+            "best_fragged": sum(1 for lp in self.best_plan.layers.values()
+                                if lp.weight_static_fraction < 1.0),
+            "calibration": self.calibration.summary(),
+        }
+
+    def trajectory_rows(self) -> list[dict]:
+        """Flat per-candidate rows (the ``--autotune`` JSON/CSV schema)."""
+        return [{
+            "candidate": r.index, "move": r.move, "accepted": r.accepted,
+            "best_so_far": r.best_so_far, "n_stages": r.n_stages,
+            "evicted": r.n_evicted, "fragged": r.n_fragged,
+            "fps_measured": r.fps_measured, "fps_eq6_pre": r.fps_eq6_pre,
+            "fps_eq6_cal": r.fps_eq6_cal,
+        } for r in self.trajectory]
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "summary": self.summary(),
+            "trajectory": self.trajectory_rows(),
+            "best_plan": json.loads(self.best_plan.to_json()),
+        }, indent=1)
+
+
+# =============================================================================
+# Measurement hooks (injectable — tests stub these for determinism)
+# =============================================================================
+
+def measure_pipelined_fps(sx: StreamingExecutor, xs: jax.Array, *,
+                          repeats: int = 3, warmup: int = 1) -> float:
+    """Steady-state frames/s of one pipelined executor.
+
+    Best-of-N wall clock over the whole stream, normalised by the
+    schedule's tick count ``T = B + S - 1`` rather than by ``B``: the run
+    includes the fill/drain bubbles, but in steady state the pipeline
+    retires one frame per tick, so ``T / wall`` is the steady-state rate.
+    Dividing by ``B`` instead would charge the S-1 bubble ticks to the
+    frames and bias any cross-plan comparison against deeper pipelines.
+    """
+    for _ in range(warmup):
+        sx(xs).block_until_ready()
+    best = math.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        sx(xs).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return sx.report.ticks / best
+
+
+def calibrated_latency_hook(s_per_cycle: float):
+    """A ``schedule.stage_latencies`` hook predicting measured *seconds*:
+    the analytic initiation interval scaled by the fitted ``s_per_cycle``."""
+    return lambda j, sg: s_per_cycle * initiation_interval(sg)
+
+
+# =============================================================================
+# Plan genome: the mutable decision vector the SA moves act on
+# =============================================================================
+
+@dataclasses.dataclass
+class _Genome:
+    bounds: list[int]                       # topo indices starting stages 1..
+    evict: dict[tuple[str, str], str]       # edge -> codec
+    frac: dict[str, float]                  # layer -> static weight fraction
+
+    def clone(self) -> "_Genome":
+        return _Genome(list(self.bounds), dict(self.evict), dict(self.frac))
+
+
+def _genome_from_plan(plan: ExecutionPlan, topo: list[str]) -> _Genome:
+    # stages must be contiguous along topo order; normalise with a cummax
+    # so any valid plan (producers never after consumers) maps cleanly
+    bounds, cur = [], 0
+    for i, n in enumerate(topo):
+        s = max(plan.layers[n].stage, cur)
+        if s > cur:
+            bounds.append(i)
+            cur = s
+    evict = {(s.src, s.dst): s.codec for s in plan.streams if s.evicted}
+    frac = {n: lp.weight_static_fraction for n, lp in plan.layers.items()
+            if lp.weight_static_fraction < 1.0}
+    return _Genome(bounds=bounds, evict=evict, frac=frac)
+
+
+def _plan_from_genome(g: Graph, topo: list[str], genome: _Genome, *,
+                      model: str, device: str,
+                      microbatch: int) -> ExecutionPlan:
+    bounds = sorted(genome.bounds)
+    layers = {}
+    for i, n in enumerate(topo):
+        layers[n] = LayerPlan(
+            name=n, stage=bisect.bisect_right(bounds, i),
+            weight_static_fraction=genome.frac.get(n, 1.0))
+    streams = [StreamPlan(e.src, e.dst,
+                          evicted=(e.src, e.dst) in genome.evict,
+                          codec=genome.evict.get((e.src, e.dst), "none"))
+               for e in g.edges()]
+    return ExecutionPlan(model=model, device=device,
+                         n_stages=len(bounds) + 1, layers=layers,
+                         streams=streams, microbatch=microbatch,
+                         topo_order=topo)
+
+
+def _propose(genome: _Genome, g: Graph, topo: list[str],
+             deep_edges: list[tuple[str, str]], weighty: list[str],
+             rng: random.Random, cfg: AutotuneConfig
+             ) -> tuple[_Genome, str] | None:
+    """One SA move on a clone of ``genome``; None when no move applies."""
+    moves = list(MOVES)
+    rng.shuffle(moves)
+    for move in moves:
+        cand = genome.clone()
+        if move == "split" and len(cand.bounds) + 1 < cfg.max_stages:
+            options = [i for i in range(1, len(topo))
+                       if i not in cand.bounds]
+            if options:
+                cand.bounds = sorted(cand.bounds + [rng.choice(options)])
+                return cand, move
+        elif move == "merge" and cand.bounds:
+            cand.bounds.remove(rng.choice(cand.bounds))
+            return cand, move
+        elif move == "evict":
+            options = [e for e in deep_edges if e not in cand.evict]
+            if options:
+                cand.evict[rng.choice(options)] = rng.choice(cfg.codecs)
+                return cand, move
+        elif move == "unevict" and cand.evict:
+            del cand.evict[rng.choice(sorted(cand.evict))]
+            return cand, move
+        elif move == "frag" and weighty:
+            name = rng.choice(weighty)
+            cur = cand.frac.get(name, 1.0)
+            new = min(1.0, max(cfg.min_static_fraction,
+                               cur + rng.choice((-1, 1)) * cfg.frag_step))
+            if new != cur:
+                if new >= 1.0:
+                    cand.frac.pop(name, None)
+                else:
+                    cand.frac[name] = new
+                return cand, move
+    return None
+
+
+# =============================================================================
+# The autotuner
+# =============================================================================
+
+def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
+             measure_fps: Callable[[StreamingExecutor, jax.Array], float]
+             | None = None,
+             measure_stages: Callable[[StreamingExecutor, jax.Array],
+                                      list[float]] | None = None
+             ) -> AutotuneResult:
+    """Measured-in-the-loop plan search over executable graph ``g``.
+
+    The seed candidate is the default DSE plan (``run_dse`` under
+    ``cfg.dse``); subsequent candidates are SA perturbations of the plan
+    genome, each *executed* through the pipelined streamer on a
+    ``cfg.microbatches``-deep stream.  Returns the best measured plan, the
+    full predicted-vs-measured trajectory, and the latency-model
+    calibration fitted from every measured stage.
+    """
+    cfg = cfg or AutotuneConfig()
+    rng = random.Random(cfg.seed)
+    measure_fps = measure_fps or (
+        lambda sx, xs: measure_pipelined_fps(sx, xs, repeats=cfg.repeats,
+                                             warmup=cfg.warmup))
+    measure_stages = measure_stages or (
+        lambda sx, x: measured_stage_latencies(sx, x, repeats=cfg.repeats,
+                                               warmup=cfg.warmup))
+
+    # -- seed: the default DSE plan ------------------------------------------
+    dse_cfg = cfg.dse or DSEConfig(batch=1, codecs=("none",) + cfg.codecs,
+                                   word_bits=16, cut_kinds=("pool", "conv"))
+    res = run_dse(g, dev, dse_cfg)
+    seed_plan = plan_from_dse(g.name, dev.name, res,
+                              microbatch=cfg.microbatches)
+    topo = g.topo()
+    genome = _genome_from_plan(seed_plan, topo)
+
+    g.compute_buffer_depths()
+    in_out = {n for n in topo if g.vertex(n).kind in ("input", "output")}
+    ranked = sorted((e for e in g.edges()
+                     if e.src not in in_out and e.dst not in in_out),
+                    key=lambda e: e.buffer_depth, reverse=True)
+    deep_edges = [(e.src, e.dst) for e in ranked[:max(len(ranked) // 2, 1)]]
+    weighty = [n for n in topo if g.vertex(n).kind in WEIGHT_KINDS]
+
+    in_shape = exec_input_shape(g)
+    x = jax.random.normal(jax.random.PRNGKey(cfg.seed), in_shape, jnp.float32)
+    xs = jnp.broadcast_to(x, (cfg.microbatches,) + in_shape)
+
+    def evaluate(genome: _Genome, index: int, move: str
+                 ) -> tuple[CandidateRecord, ExecutionPlan,
+                            StreamingExecutor]:
+        plan = _plan_from_genome(g, topo, genome, model=g.name,
+                                 device=dev.name,
+                                 microbatch=cfg.microbatches)
+        sx = lower_plan_pipelined(g, plan, microbatches=cfg.microbatches,
+                                  kernel_mode=cfg.kernel_mode)
+        fps = measure_fps(sx, xs)
+        cyc = stage_latencies(g, plan)               # analytic, cycles
+        rec = CandidateRecord(
+            index=index, move=move, accepted=False,
+            n_stages=plan.n_stages,
+            n_evicted=sum(1 for s in plan.streams if s.evicted),
+            n_fragged=sum(1 for lp in plan.layers.values()
+                          if lp.weight_static_fraction < 1.0),
+            fps_measured=fps,
+            eq5_cycles=eq5_sequential_time(cyc),
+            eq6_cycles=eq6_pipeline_time(cyc),
+            stage_cycles=list(cyc))
+        return rec, plan, sx
+
+    trajectory: list[CandidateRecord] = []
+    rec, plan, sx = evaluate(genome, 0, "seed")
+    rec.accepted = rec.best_so_far = True
+    rec.stage_seconds = list(measure_stages(sx, x))
+    trajectory.append(rec)
+    baseline_fps = cur_fps = best_fps = rec.fps_measured
+    best_plan, best_rec = plan, rec
+
+    temp = cfg.init_temperature
+    for i in range(1, cfg.n_candidates):
+        prop = _propose(genome, g, topo, deep_edges, weighty, rng, cfg)
+        if prop is None:
+            break
+        cand, move = prop
+        rec, plan, sx = evaluate(cand, i, move)
+        delta = (rec.fps_measured - cur_fps) / max(cur_fps, 1e-30)
+        accept = delta >= 0 or rng.random() < math.exp(delta / max(temp, 1e-9))
+        if accept:
+            genome, cur_fps = cand, rec.fps_measured
+            rec.accepted = True
+            rec.stage_seconds = list(measure_stages(sx, x))
+        if rec.fps_measured > best_fps:
+            best_fps, best_plan, best_rec = rec.fps_measured, plan, rec
+            rec.best_so_far = True
+        trajectory.append(rec)
+        temp *= cfg.cooling
+
+    # -- calibrate the latency model against measured tick times -------------
+    # steady-state tick time == Eq. 6 slowest-stage time, so each candidate
+    # contributes one (analytic eq6 cycles, measured seconds/frame) point
+    pts = [(r.eq6_cycles, 1.0 / r.fps_measured) for r in trajectory
+           if r.eq6_cycles > 0 and r.fps_measured > 0]
+    denom = sum(a * a for a, _ in pts)
+    s_per_cycle = (sum(a * m for a, m in pts) / denom) if denom else 0.0
+    nominal = 1.0 / (dev.freq_mhz * 1e6)
+    for r in trajectory:
+        r.fps_eq6_pre = 1.0 / (r.eq6_cycles * nominal)
+        if s_per_cycle > 0:
+            r.fps_eq6_cal = 1.0 / (r.eq6_cycles * s_per_cycle)
+
+    t_meas = 1.0 / best_rec.fps_measured
+    pre_err = abs(math.log((best_rec.eq6_cycles * nominal) / t_meas))
+    post_err = (abs(math.log((best_rec.eq6_cycles * s_per_cycle) / t_meas))
+                if s_per_cycle > 0 else math.inf)
+    calib = CalibrationReport(s_per_cycle=s_per_cycle, n_points=len(pts),
+                              freq_mhz=dev.freq_mhz, pre_err=pre_err,
+                              post_err=post_err)
+
+    best_plan.est_throughput_fps = best_rec.fps_eq6_cal
+    best_plan.est_latency_s = best_rec.eq5_cycles * (s_per_cycle or nominal)
+    return AutotuneResult(model=g.name, device=dev.name, best_plan=best_plan,
+                          best_fps=best_fps, baseline_fps=baseline_fps,
+                          trajectory=trajectory, calibration=calib,
+                          microbatches=cfg.microbatches)

@@ -33,10 +33,16 @@ carries ``meta["exec"] = {cin, cout, m[, m_out]}`` and activations flow as
   conv       y = x @ W,  W: (cin, cout)    [1x1 channel mixing]
   matmul     same as conv
   deconv     same as conv (builders pair it with an upsample vertex)
+  dwconv     depthwise temporal conv, W: (taps, c) — per-channel mix
+             of ``taps`` adjacent positions ('same' padding); the
+             3x1x1 temporal kernel of the X3D blocks
   act        relu
-  pool       mean over adjacent row pairs  (m -> m/2)
-  upsample   repeat rows x2                (m -> 2m)
+  pool       position-axis mean to m_out rows (m -> m_out; m_out=m/2
+             is the classic halving pool, m_out=1 the SE global pool)
+  upsample   repeat rows m_out/m times      (m -> m_out)
   add        elementwise sum of inputs
+  mul        elementwise product of inputs; a (1, c) operand
+             broadcasts over positions (SE excitation)
   concat     channel concatenation, predecessor order
   output     ravel-and-concatenate all inputs into one vector
   ========== =====================================================
@@ -65,6 +71,7 @@ from ..kernels.bfp8 import bfp8_dequant, bfp8_quant
 from ..kernels.streamed_matmul import _round_up, streamed_matmul_padded
 
 WEIGHT_KINDS = ("conv", "deconv", "matmul")
+TEMPORAL_KINDS = ("dwconv",)
 LOSSLESS_CODECS = ("none", "rle", "huffman")
 BFP8_BLOCK = 32
 
@@ -136,23 +143,44 @@ def init_params(g: Graph, seed: int = 0,
     """Deterministic per-vertex weights for every weighty executable op."""
     params: dict[str, jax.Array] = {}
     for v in g.vertices():
-        if v.kind in WEIGHT_KINDS:
-            spec = _exec_spec(g, v.name)
-            key = jax.random.fold_in(jax.random.PRNGKey(seed),
-                                     zlib.crc32(v.name.encode()))
+        if v.kind not in WEIGHT_KINDS and v.kind not in TEMPORAL_KINDS:
+            continue
+        spec = _exec_spec(g, v.name)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                 zlib.crc32(v.name.encode()))
+        if v.kind in TEMPORAL_KINDS:
+            taps = spec.get("taps", 3)
+            params[v.name] = jax.random.normal(
+                key, (taps, spec["cout"]), dtype) / math.sqrt(taps)
+        else:
             scale = 1.0 / math.sqrt(spec["cin"])
             params[v.name] = scale * jax.random.normal(
                 key, (spec["cin"], spec["cout"]), dtype)
     return params
 
 
-def _pool(x: jax.Array) -> jax.Array:
+def _pool(x: jax.Array, m_out: int) -> jax.Array:
     m, c = x.shape
-    return x.reshape(m // 2, 2, c).mean(axis=1)
+    if m % m_out:
+        raise ValueError(f"pool needs m_out | m, got {m} -> {m_out}")
+    return x.reshape(m_out, m // m_out, c).mean(axis=1)
 
 
-def _upsample(x: jax.Array) -> jax.Array:
-    return jnp.repeat(x, 2, axis=0)
+def _upsample(x: jax.Array, m_out: int) -> jax.Array:
+    m = x.shape[0]
+    if m_out % m:
+        raise ValueError(f"upsample needs m | m_out, got {m} -> {m_out}")
+    return jnp.repeat(x, m_out // m, axis=0)
+
+
+def _dwconv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise temporal conv: per-channel mix of adjacent positions,
+    'same' zero padding.  ``w`` is (taps, c)."""
+    taps = w.shape[0]
+    pad = taps // 2
+    xp = jnp.pad(x, ((pad, taps - 1 - pad), (0, 0)))
+    m = x.shape[0]
+    return sum(w[k][None, :] * xp[k:k + m] for k in range(taps))
 
 
 def bfp8_spill_encode(x: jax.Array, *, use_pallas: bool,
@@ -279,13 +307,16 @@ def analyze_plan(g: Graph, plan: ExecutionPlan | None, *,
     frac: dict[str, float] = {}
     for name in topo:
         v = g.vertex(name)
-        if v.kind not in WEIGHT_KINDS:
+        if v.kind not in WEIGHT_KINDS and v.kind not in TEMPORAL_KINDS:
             continue
         lp = layers.get(name)
         f = lp.weight_static_fraction if lp is not None else 1.0
         frac[name] = f
         spec = _exec_spec(g, name)
-        wbits = spec["cin"] * spec["cout"] * v.weight_bits
+        if v.kind in TEMPORAL_KINDS:
+            wbits = spec.get("taps", 3) * spec["cout"] * v.weight_bits
+        else:
+            wbits = spec["cin"] * spec["cout"] * v.weight_bits
         static_bits += int(round(f * wbits))
         streamed_bits += int(round((1.0 - f) * wbits))
 
@@ -314,14 +345,21 @@ def apply_vertex(v, ins: list[jax.Array], params: dict, x: jax.Array | None,
                            preferred_element_type=jnp.float32).astype(h.dtype)
         return streamed_matmul_padded(h, params[v.name], static_fraction=f,
                                       interpret=analysis.interpret)
+    if v.kind in TEMPORAL_KINDS:
+        # the temporal split is not streamable through the matmul kernel;
+        # a fragmented dwconv streams per the plan's traffic accounting but
+        # executes the full (numerically identical) temporal mix.
+        return _dwconv(ins[0], params[v.name])
     if v.kind == "act":
         return jax.nn.relu(ins[0])
     if v.kind == "pool":
-        return _pool(ins[0])
+        return _pool(ins[0], analysis.out_shape[v.name][0])
     if v.kind == "upsample":
-        return _upsample(ins[0])
+        return _upsample(ins[0], analysis.out_shape[v.name][0])
     if v.kind == "add":
         return functools.reduce(jnp.add, ins)
+    if v.kind == "mul":
+        return functools.reduce(jnp.multiply, ins)
     if v.kind == "concat":
         return jnp.concatenate(ins, axis=1)
     if v.kind == "output":

@@ -10,15 +10,56 @@ microbatches — stage ``j`` processes microbatch ``b`` while stage ``j+1``
 processes ``b-1`` — so steady-state throughput tracks Eq. 6's
 ``1/max_j(L_j)`` slowest-stage model instead.
 
-Modules
--------
-``schedule``   1F1B fill/steady/drain schedule + per-stage latency model
-               hook (Eq. 5 vs Eq. 6 estimates, occupancy/stall accounting).
-``queues``     bounded inter-stage ring buffers holding the spilled/encoded
-               representation, capacity from Eq. 1's ``d_b'``.
-``pipeline``   the jitted multi-microbatch step (``jax.lax.scan`` over a
-               stage-state carry on one device; ``shard_map`` ring pipeline
-               when devices >= stages) and the ``StreamReport``.
+Public API (everything re-exported here; the per-name contracts)
+----------------------------------------------------------------
+
+Lowering and execution (``pipeline.py``)
+    ``lower_plan_pipelined(g, plan, *, microbatches, kernel_mode, seed,
+    interpret, placement)``
+        Lower a plan to a :class:`StreamingExecutor`.  Single device: one
+        jitted ``lax.scan`` over ticks whose carry holds, per
+        stage-crossing edge, the *encoded* spill (double-buffered BFP8
+        payloads for ``bfp8`` streams).  ``placement="shard_map"`` places
+        one stage per device with ``ppermute``-ring transit.
+    ``StreamingExecutor``
+        The lowered object: ``sx(xs)`` maps a ``(B, m, c)`` stream to
+        ``(B, L)`` outputs, bit-for-bit what the sequential executor
+        produces per microbatch; carries ``report``, the individually
+        jitted ``stage_fns``, and ``zero_reads()`` for driving them.
+    ``StreamReport``
+        :class:`~repro.runtime.executor.SpillReport` plus the schedule
+        view: per-stage occupancy/stalls/latency, queue high-water marks,
+        ``eq5_time``/``eq6_time``/``bottleneck_stage``.
+    ``measured_stage_latencies(sx, x, *, repeats, warmup)``
+        Wall-clock ``L_j`` per stage in the dispatch regime the
+        sequential schedule pays — the measured edition of the Eq. 5/6
+        hook, and the autotuner's per-stage diagnostic.
+
+Schedule and latency model (``schedule.py``)
+    ``build_schedule(n_stages, n_microbatches)`` / ``PipelineSchedule``
+        The 1F1B fill/steady/drain diagram: ``T = B + S - 1`` ticks,
+        ``microbatch_at``/``active_stages``/``phase`` queries, per-stage
+        occupancy and stall accounting.  ``StageTask`` is one
+        (tick, stage, microbatch) cell.
+    ``stage_latencies(g, plan, *, hook)``
+        ``L_j`` per stage — analytic initiation interval by default
+        (cycles, the DSE's own model), or any ``hook(j, subgraph)``
+        override, e.g. measured seconds or the autotuner's
+        ``calibrated_latency_hook(s_per_cycle)``.
+    ``eq5_sequential_time(L)`` / ``eq6_pipeline_time(L)``
+        The two frame-time estimators: stage sum vs slowest stage.
+    ``simulate_schedule(schedule, queues, producer_stage, consumer_stage)``
+        Walk the schedule through the bounded rings for the report's
+        occupancy/stall statistics.
+
+Bounded inter-stage queues (``queues.py``)
+    ``queue_specs(g, stage_of, out_shape, codec_of)`` / ``QueueSpec``
+        One spec per stage-crossing edge; capacity in microbatch entries
+        derives from Eq. 1's ``d_b' = 2·DMA_FIFO_DEPTH`` word budget,
+        floored at the two DMA-burst FIFOs' double buffer.
+    ``build_queues(specs)`` / ``RingBuffer``
+        The Python-side rings with occupancy high-water and push/pop
+        stall accounting (diagnostics, not flow control).
 """
 from .pipeline import (StreamingExecutor, StreamReport, lower_plan_pipelined,
                        measured_stage_latencies)

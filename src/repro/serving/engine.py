@@ -17,6 +17,8 @@ oldest-first, so the eviction *order* is the retirement order.
 ``GraphStreamServer`` is the CNN-side counterpart: a batched front-end
 that packs submitted frames into fixed-length microbatch streams and runs
 them through the pipelined streaming executor (``runtime/streamer``).
+``GraphStreamServer.autotuned`` runs the closed-loop autotuner
+(``repro.optim.autotune``) first and serves the measured-best plan.
 """
 from __future__ import annotations
 
@@ -239,9 +241,30 @@ class GraphStreamServer:
             g, plan, microbatches=microbatches, **lower_kw)
         self.microbatches = microbatches
         self.stats = StreamServerStats()
+        self.autotune_result = None          # set by .autotuned()
         self._pending: list[tuple[int, np.ndarray]] = []
         self._results: dict[int, np.ndarray] = {}
         self._next_ticket = 0
+
+    @classmethod
+    def autotuned(cls, g, dev, *, autotune_cfg=None, **lower_kw
+                  ) -> "GraphStreamServer":
+        """Serve the *measured-best* plan instead of the default DSE plan.
+
+        Runs the closed-loop autotuner (``repro.optim.autotune``) over
+        executable graph ``g`` on device view ``dev`` — every candidate is
+        executed through the pipelined streamer — then builds the server
+        around the winning plan at the autotuner's microbatch depth.  The
+        full :class:`~repro.optim.autotune.AutotuneResult` (trajectory +
+        calibration report) is kept on ``server.autotune_result``.
+        """
+        from repro.optim.autotune import AutotuneConfig, autotune
+        cfg = autotune_cfg or AutotuneConfig()
+        result = autotune(g, dev, cfg)
+        srv = cls(g, result.best_plan, microbatches=cfg.microbatches,
+                  **lower_kw)
+        srv.autotune_result = result
+        return srv
 
     @property
     def report(self):
