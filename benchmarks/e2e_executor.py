@@ -29,6 +29,11 @@ Both land in one artifact with a shared row schema (CSV on stdout via
 schedules in the same units as fps_executed: sequential should track
 fps_eq5, pipelined should land nearer fps_eq6 (the ISSUE 2 acceptance).
 
+Every search + lowering below goes through the one compile façade
+(``repro.api``): ``CompileSpec(strategy="dse"|"autotune"|"manual-plan",
+mode="reference"|"staged"|"pipelined")`` -> ``Compiled`` — the benchmark
+measures exactly what ``repro.compile`` hands users.
+
 ``--autotune`` runs the closed loop instead (``repro.optim.autotune``): the
 default DSE plan seeds an SA search whose every candidate is *executed*
 through the pipelined streamer, and the candidate trajectory lands as
@@ -39,6 +44,7 @@ latency-model calibration report.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -46,13 +52,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DSEConfig, EXEC_MODELS, exec_input_shape, get_model,
-                        plan_from_dse, run_dse)
+from repro.api import CompileSpec, build_plan, compile as smof_compile
+from repro.core import DSEConfig, EXEC_MODELS
 from repro.core.resources import Device
-from repro.optim.autotune import AutotuneConfig, autotune
-from repro.runtime.executor import lower_plan, reference_pipeline
+from repro.optim.autotune import AutotuneConfig
 from repro.runtime.streamer import (eq5_sequential_time, eq6_pipeline_time,
-                                    lower_plan_pipelined,
                                     measured_stage_latencies)
 
 from .common import emit, timeit
@@ -120,25 +124,28 @@ def run(smoke: bool = False, pipelined: bool = False,
     names = MODEL_NAMES[:1] if smoke else MODEL_NAMES
     repeats = 3 if smoke else 5
     for name in names:
-        # the DSE only mutates graph design state it resets on entry, and
-        # the dense reference is codec-independent: build/lower both once
-        g = get_model(name, EXEC_MODELS)()
-        in_shape = exec_input_shape(g)
-        ref = reference_pipeline(g)
+        # everything below goes through the one compile façade: the dense
+        # reference is codec-independent, so it is compiled once per model
+        ref = smof_compile(CompileSpec(model=name, device=TINY_STREAM,
+                                       mode="reference"))
+        in_shape = ref.input_shape()
         x = jax.random.normal(jax.random.PRNGKey(0), in_shape, jnp.float32)
-        yr = ref(x).block_until_ready()
+        yr = ref.run(x).block_until_ready()
         for codecs, cut_kinds in ((c, k) for c in (("none",), ("none", "bfp8"))
                                   for k in CUT_VARIANTS):
-            res = run_dse(g, TINY_STREAM,
-                          DSEConfig(batch=1, codecs=codecs, word_bits=16,
-                                    cut_kinds=cut_kinds))
-            plan = plan_from_dse(name, TINY_STREAM.name, res)
-            low = lower_plan(g, plan)
-            yl = low(x).block_until_ready()
+            staged = smof_compile(CompileSpec(
+                model=name, device=TINY_STREAM, strategy="dse", mode="staged",
+                dse=DSEConfig(batch=1, codecs=codecs, word_bits=16,
+                              cut_kinds=cut_kinds)))
+            plan, low = staged.plan, staged.executor
+            yl = staged.run(x).block_until_ready()
             rel = float(jnp.abs(yl - yr).max() / jnp.abs(yr).max())
 
             B = microbatches
-            sx = lower_plan_pipelined(g, plan, microbatches=B)
+            # same plan, pipelined — no re-search, just a re-lowering
+            sx = smof_compile(dataclasses.replace(
+                staged.spec, mode="pipelined", strategy="manual-plan",
+                plan=plan, microbatches=B)).executor
             lat = measured_stage_latencies(sx, x)  # compiles stage fns only
             fps_eq5 = 1.0 / eq5_sequential_time(lat)
             fps_eq6 = 1.0 / eq6_pipeline_time(lat)
@@ -196,8 +203,12 @@ def run_autotune(smoke: bool = False, microbatches: int = 8,
         kernel_mode="auto")
     out = {"schema": list(AUTOTUNE_SCHEMA), "rows": [], "summaries": {}}
     for name in names:
-        g = get_model(name, EXEC_MODELS)()
-        res = autotune(g, TINY_STREAM, cfg)
+        # the search half of the façade only: the autotuner already lowered
+        # and measured every candidate, so compiling (= re-lowering) the
+        # winner here would be pure wasted jit time
+        _, res = build_plan(CompileSpec(
+            model=name, device=TINY_STREAM, strategy="autotune",
+            mode="pipelined", autotune_cfg=cfg, microbatches=microbatches))
         for r in res.trajectory_rows():
             row = {"model": name, **r}
             out["rows"].append(row)

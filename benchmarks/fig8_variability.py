@@ -9,7 +9,6 @@ from __future__ import annotations
 
 from repro.core import DSEConfig, U200, ZCU102, build_unet, run_dse
 from repro.core.eviction import eviction_bw_words
-from repro.core.fragmentation import fragmentation_bw_words
 from repro.core.partition import subgraph_cost
 
 from .common import emit, timeit

@@ -1,16 +1,25 @@
 """Paper-faithful reproduction run: Tables III-V + Figs 6-8 in one shot.
 
-    PYTHONPATH=src python examples/fpga_repro.py
+    PYTHONPATH=src python examples/fpga_repro.py                # full sweep
+    PYTHONPATH=src python examples/fpga_repro.py --model unet_exec \
+        --device u200 --mode pipelined                          # one design
+
+With no ``--model`` the full paper sweep runs as before.  With a model the
+script compiles exactly one design point through the ``repro.compile``
+façade — the same ``--model/--device/--mode`` flags as
+``examples/quickstart.py``, with choices sourced from the
+``EXEC_MODELS``/``PAPER_MODELS`` registries.
 """
+import argparse
 import sys
 
 sys.path.insert(0, ".")  # allow running from repo root
 
-from benchmarks import (fig6_ablation, fig7_compression, fig8_variability,
-                        table3_models, table4_partitioning, table5_throughput)
 
-
-def main() -> None:
+def run_sweep() -> None:
+    from benchmarks import (fig6_ablation, fig7_compression, fig8_variability,
+                            table3_models, table4_partitioning,
+                            table5_throughput)
     print("name,us_per_call,derived")
     print("# --- Table III: model characteristics ---")
     table3_models.run()
@@ -24,6 +33,47 @@ def main() -> None:
     fig8_variability.run()
     print("# --- Table V: cross-work comparison points ---")
     table5_throughput.run()
+
+
+def run_one(args) -> None:
+    import repro
+    from repro.api import spec_from_args
+    from repro.core import EXEC_MODELS
+
+    spec = spec_from_args(args)
+    if args.model in EXEC_MODELS:
+        import jax
+        import jax.numpy as jnp
+        compiled = repro.compile(spec)
+        x = jax.random.normal(jax.random.PRNGKey(0), compiled.input_shape(),
+                              jnp.float32)
+        y = compiled.run(x)
+        print(f"{args.model} on {args.device} ({compiled.mode}): "
+              f"output shape {tuple(y.shape)}")
+        print(f"report: {compiled.report()}")
+    else:
+        # paper-scale models are costed, not executed: plan only
+        # (mode="reference" is plan-free, so cost it as "staged")
+        import dataclasses
+        if spec.mode == "reference":
+            spec = dataclasses.replace(spec, mode="staged")
+        plan, _ = repro.build_plan(spec)
+        print(f"{args.model} on {args.device}: {plan.n_stages} stage(s), "
+              f"{sum(1 for s in plan.streams if s.evicted)} evicted edges, "
+              f"est {plan.est_throughput_fps:.2f} fps / "
+              f"{plan.est_latency_s * 1e3:.1f} ms")
+
+
+def main() -> None:
+    from repro.api import add_compile_args
+
+    ap = argparse.ArgumentParser()
+    add_compile_args(ap, default_model=None)
+    args = ap.parse_args()
+    if args.model:
+        run_one(args)
+    else:
+        run_sweep()
 
 
 if __name__ == "__main__":

@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import decode_step, forward, init_cache, init_params

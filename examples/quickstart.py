@@ -1,57 +1,72 @@
-"""Quickstart: run the SMOF DSE on a paper model and print the design.
+"""Quickstart: the one compile façade, from model name to running design.
 
     PYTHONPATH=src python examples/quickstart.py [--device u200] [--batch 1]
-    PYTHONPATH=src python examples/quickstart.py --model unet_exec --execute
+    PYTHONPATH=src python examples/quickstart.py --model unet_exec \
+        --mode pipelined --execute [--save unet.smof.json]
 
-Reproduces the paper's Fig. 4 design point (UNet on U200: ~21 fps, single
-partition, weights mostly on-chip) and shows the decision vector the DSE
-produced — which edges were evicted, which layers fragmented.  Models are
-looked up through the one registry (``repro.core.get_model``): paper-scale
-cost-model graphs (``unet``, ``yolov8n``, ...) are costed only, while the
-``*_exec`` graphs (``unet_exec``, ``yolo_head_exec``, ``x3d_exec``) can
-additionally be *executed* with ``--execute`` — the plan is lowered to a
-real JAX pipeline and its off-chip traffic report printed.
+Everything goes through ``repro.compile``: ``CompileSpec`` names the model
+(one registry: ``EXEC_MODELS`` for executable graphs, ``PAPER_MODELS`` for
+paper-scale cost-model graphs), the device, the plan strategy and the
+execution mode; the returned ``Compiled`` artifact runs, reports, and
+saves itself.  Reproduces the paper's Fig. 4 design point (UNet on U200:
+~21 fps, single partition, weights mostly on-chip) and shows the decision
+vector the DSE produced — which edges were evicted, which layers
+fragmented.  Paper-scale models are costed only; the ``*_exec`` models can
+additionally be *executed* with ``--execute``.
 """
 import argparse
+import dataclasses
 
-from repro.core import (DSEConfig, EXEC_MODELS, PAPER_MODELS, exec_input_shape,
-                        get_device, get_model, plan_from_dse, run_dse)
+import repro
+from repro.api import add_compile_args, spec_from_args
+from repro.core import DSEConfig, EXEC_MODELS, get_model
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--device", default="u200")
+    add_compile_args(ap, default_model="unet", default_mode="staged")
     ap.add_argument("--batch", type=int, default=1)
-    ap.add_argument("--model", default="unet",
-                    help=f"one of: {', '.join(sorted({**EXEC_MODELS, **PAPER_MODELS}))}")
     ap.add_argument("--execute", action="store_true",
-                    help="lower the plan to a JAX pipeline and run it "
-                         "(needs a *_exec model)")
+                    help="lower the plan and run it (needs a *_exec model)")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="with --execute: save the Compiled artifact")
     args = ap.parse_args()
 
-    dev = get_device(args.device)
+    spec = spec_from_args(
+        args, strategy="dse",
+        dse=DSEConfig(batch=args.batch, cut_kinds=("conv", "pool"),
+                      codecs=("none", "rle"), word_bits=8))
     g = get_model(args.model)()
     print(f"{args.model}: {g.total_macs() / 1e9:.1f} GMACs, "
           f"{g.total_weight_words() / 1e6:.1f} M params, "
           f"{g.g.number_of_nodes()} vertices")
-    res = run_dse(g, dev, DSEConfig(batch=args.batch,
-                                    cut_kinds=("conv", "pool"),
-                                    codecs=("none", "rle"), word_bits=8))
-    s = res.summary()
-    print(f"\nDSE result on {dev.name} (paper Fig. 4 for unet/u200: "
+
+    # the search half of the façade works for every model — executable or
+    # costed-only — and the plan carries the whole decision vector
+    # (mode="reference" is plan-free, so the design print uses "staged")
+    plan_spec = (spec if spec.mode != "reference"
+                 else dataclasses.replace(spec, mode="staged"))
+    plan, _ = repro.build_plan(plan_spec, g)
+    fragged = [lp for lp in plan.layers.values()
+               if lp.weight_static_fraction < 1.0]
+    print(f"\nDSE result on {args.device} (paper Fig. 4 for unet/u200: "
           f"21 fps / 47 ms):")
-    print(f"  throughput : {s['throughput_fps']:.2f} fps")
-    print(f"  latency    : {s['latency_s'] * 1e3:.1f} ms")
-    print(f"  partitions : {s['n_partitions']}")
-    print(f"  evictions  : {s['n_evicted_edges']} edges")
-    print(f"  fragmented : {s['n_fragmented']} layers "
-          f"(mean m={s['mean_frag_ratio']:.2f})")
-    for e in res.partitioning.graph.edges():
-        if e.evicted:
-            print(f"    evicted: {e.src} -> {e.dst}  codec={e.codec}")
-    plan = plan_from_dse(args.model, dev.name, res)
+    print(f"  throughput : {plan.est_throughput_fps:.2f} fps")
+    print(f"  latency    : {plan.est_latency_s * 1e3:.1f} ms")
+    print(f"  partitions : {plan.n_stages}")
+    print(f"  evictions  : {sum(1 for s in plan.streams if s.evicted)} edges")
+    if fragged:
+        mean_m = sum(1.0 - lp.weight_static_fraction
+                     for lp in fragged) / len(fragged)
+        print(f"  fragmented : {len(fragged)} layers (mean m={mean_m:.2f})")
+    else:
+        print("  fragmented : 0 layers")
+    for s in plan.streams:
+        if s.evicted:
+            print(f"    evicted: {s.src} -> {s.dst}  codec={s.codec}")
     print(f"\nExecutionPlan: {plan.n_stages} stage(s), "
-          f"{len(plan.layers)} layers; est {plan.est_throughput_fps:.2f} fps")
+          f"{len(plan.layers)} layers; est {plan.est_throughput_fps:.2f} fps; "
+          f"provenance {plan.provenance}")
 
     if args.execute:
         if args.model not in EXEC_MODELS:
@@ -59,13 +74,17 @@ def main() -> None:
                              f"{args.model!r} (see EXEC_MODELS)")
         import jax
         import jax.numpy as jnp
-        from repro.runtime.executor import lower_plan
-        low = lower_plan(g, plan)
-        x = jax.random.normal(jax.random.PRNGKey(0), exec_input_shape(g),
+        # same spec, same plan — just lowered per --mode this time
+        compiled = repro.compile(dataclasses.replace(
+            spec, model=g, strategy="manual-plan", plan=plan))
+        x = jax.random.normal(jax.random.PRNGKey(0), compiled.input_shape(),
                               jnp.float32)
-        y = low(x)
-        print(f"\nexecuted: output shape {tuple(y.shape)}")
-        print(f"off-chip traffic: {low.report.summary()}")
+        y = compiled.run(x)
+        print(f"\nexecuted ({compiled.mode}): output shape {tuple(y.shape)}")
+        print(f"unified report: {compiled.report()}")
+        if args.save:
+            print(f"saved artifact: {compiled.save(args.save)} "
+                  f"(reload with repro.Compiled.load)")
 
 
 if __name__ == "__main__":

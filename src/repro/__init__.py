@@ -1,0 +1,31 @@
+"""SMOF reproduction — streaming CNNs with smart off-chip eviction.
+
+The public toolflow surface is the compile façade (``repro.api``):
+
+    import repro
+
+    compiled = repro.compile(repro.CompileSpec(
+        model="unet_exec", device="u200", mode="pipelined"))
+    y = compiled.run(x)
+
+Subpackages (``repro.core``, ``repro.runtime``, ``repro.optim``, ...)
+remain importable directly for low-level use; the façade names below are
+resolved lazily (PEP 562) so ``import repro.core`` does not drag in the
+executor/serving stack.
+"""
+
+_API_NAMES = ("CompileSpec", "Compiled", "compile", "build_plan",
+              "add_compile_args", "spec_from_args", "MODES", "STRATEGIES")
+
+__all__ = list(_API_NAMES)
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from . import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_NAMES))

@@ -1,0 +1,428 @@
+"""The one SMOF compile façade: ``CompileSpec`` -> ``Compiled`` artifact.
+
+SMOF's pitch is a *toolflow*: one entry point takes a CNN graph plus a
+device and emits a deployable streaming design with off-chip eviction
+decisions baked in.  This module is that entry point for the whole repo —
+the single seam where model resolution (``core.builders.get_model``),
+plan search (``core.dse.run_dse`` / ``optim.autotune``), lowering
+(``runtime.executor.lower_plan`` / ``runtime.streamer
+.lower_plan_pipelined``), serving (``serving.engine.GraphStreamServer``)
+and artifact persistence meet.  The low-level functions stay public, but
+every driver in this repo (benchmarks, examples, serving, the autotune
+CLI) goes through here:
+
+    import repro
+
+    compiled = repro.compile(repro.CompileSpec(
+        model="unet_exec", device="u200", mode="pipelined"))
+    y = compiled.run(x)                    # execute one frame / stream
+    print(compiled.report())               # unified traffic + schedule view
+    compiled.save("unet.smof.json")        # versioned plan artifact
+    srv = compiled.serve()                 # batched streaming front-end
+
+    again = repro.Compiled.load("unet.smof.json")   # fresh process OK:
+    again.run(x)                           # bit-identical (seeded params)
+
+Spec knobs -> subsystems
+------------------------
+``strategy``  "dse" (Algorithm 1, the default), "autotune" (closed-loop
+              measured search, ``optim/autotune.py``), or "manual-plan"
+              (caller supplies ``spec.plan``).
+``mode``      "reference" (dense baseline, no plan), "staged" (sequential
+              executor, the Eq. 5 regime), "pipelined" (1F1B streamer,
+              the Eq. 6 regime).
+``kernel_mode`` / ``use_pallas`` / ``interpret``
+              kernel dispatch policy (``use_pallas`` is the boolean
+              shorthand: True -> "pallas", False -> "reference").
+``microbatches`` stream depth B the pipelined executor is traced for
+              (an ``autotune_cfg`` overrides it with the depth the search
+              measured at).
+``dse`` / ``autotune_cfg`` / ``seed``
+              search configuration; ``seed`` also fixes the deterministic
+              per-vertex weights, which is what makes saved artifacts
+              reproduce bit-identically in a fresh process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Any
+
+from .core.builders import (EXEC_MODELS, PAPER_MODELS, exec_input_shape,
+                            get_model)
+from .core.dse import DSEConfig, run_dse
+from .core.graph import Graph
+from .core.plan import ExecutionPlan, PLAN_SCHEMA_VERSION, plan_from_dse
+from .core.resources import ALL_DEVICES, Device, get_device
+
+MODES = ("reference", "staged", "pipelined")
+STRATEGIES = ("dse", "autotune", "manual-plan")
+
+ARTIFACT_KIND = "smof-compiled"
+ARTIFACT_SCHEMA_VERSION = 1
+
+# The default executable-path DSE configuration: eviction + fragmentation
+# friendly settings at 16-bit stream words (matches the autotuner's seed).
+_DEFAULT_DSE = DSEConfig(batch=1, codecs=("none", "bfp8"), word_bits=16,
+                         cut_kinds=("pool", "conv"))
+
+
+@dataclasses.dataclass
+class CompileSpec:
+    """Everything the toolflow needs to go graph + device -> executable.
+
+    ``model`` is a registry name (``EXEC_MODELS`` / ``PAPER_MODELS``) or an
+    already-built :class:`~repro.core.graph.Graph`; ``device`` a registry
+    name (``ALL_DEVICES``) or a :class:`~repro.core.resources.Device`.
+    """
+    model: str | Graph
+    device: str | Device = "u200"
+    strategy: str = "dse"              # dse | autotune | manual-plan
+    mode: str = "staged"               # reference | staged | pipelined
+    kernel_mode: str = "auto"          # auto | pallas | reference
+    microbatches: int = 8              # pipelined stream depth B
+    use_pallas: bool | None = None     # bool shorthand over kernel_mode
+    autotune_cfg: Any = None           # optim.autotune.AutotuneConfig
+    seed: int = 0                      # weight init + search RNG
+    plan: ExecutionPlan | None = None  # strategy="manual-plan" input
+    dse: DSEConfig | None = None       # strategy="dse" knobs
+    interpret: bool | None = None      # Pallas interpret-mode override
+    placement: str = "auto"            # pipelined: interleave | shard_map
+
+    def resolved_kernel_mode(self) -> str:
+        if self.use_pallas is None:
+            return self.kernel_mode
+        return "pallas" if self.use_pallas else "reference"
+
+    def validate(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; pick one of "
+                             f"{MODES}")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; pick one "
+                             f"of {STRATEGIES}")
+        if (self.strategy == "manual-plan" and self.plan is None
+                and self.mode != "reference"):
+            raise ValueError('strategy="manual-plan" needs spec.plan '
+                             '(mode="reference" is the plan-free baseline)')
+        if self.microbatches < 1:
+            raise ValueError(f"need >= 1 microbatch, got {self.microbatches}")
+
+
+def _resolve_graph(spec: CompileSpec) -> Graph:
+    if isinstance(spec.model, Graph):
+        return spec.model
+    return get_model(spec.model)()
+
+
+def _resolve_device(spec: CompileSpec) -> Device:
+    if isinstance(spec.device, Device):
+        return spec.device
+    return get_device(spec.device)
+
+
+def _device_name(spec: CompileSpec, plan: ExecutionPlan | None) -> str:
+    if isinstance(spec.device, Device):
+        return spec.device.name
+    if spec.strategy == "manual-plan" and plan is not None and plan.device:
+        return plan.device          # the artifact's own record wins
+    return spec.device
+
+
+def _autotune_digest(result) -> str:
+    """Stable short digest of the search trajectory (provenance stamp)."""
+    payload = json.dumps(result.trajectory_rows(), sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def build_plan(spec: CompileSpec, graph: Graph | None = None
+               ) -> tuple[ExecutionPlan | None, Any]:
+    """Resolve the spec's decision vector: ``(plan, autotune_result)``.
+
+    This is the search half of :func:`compile` — usable on its own for
+    paper-scale (cost-model-only) graphs that cannot be lowered.  Returns
+    ``(None, None)`` for ``mode="reference"`` (the dense baseline ignores
+    any plan) and ``autotune_result=None`` unless ``strategy="autotune"``.
+
+    The returned plan carries provenance: strategy, device name, and — for
+    autotuned plans — the calibration ``s_per_cycle`` plus a digest of the
+    measured trajectory.
+    """
+    spec.validate()
+    g = graph if graph is not None else _resolve_graph(spec)
+    if spec.mode == "reference":
+        return None, None
+
+    autotune_result = None
+    cfg = None
+    if spec.strategy == "manual-plan":
+        plan = spec.plan
+    elif spec.strategy == "autotune":
+        from .optim.autotune import AutotuneConfig, autotune
+        cfg = spec.autotune_cfg or AutotuneConfig(
+            microbatches=spec.microbatches,
+            kernel_mode=spec.resolved_kernel_mode(), seed=spec.seed)
+        autotune_result = autotune(g, _resolve_device(spec), cfg)
+        plan = autotune_result.best_plan
+    else:                                     # "dse": Algorithm 1
+        dev = _resolve_device(spec)
+        res = run_dse(g, dev, spec.dse or _DEFAULT_DSE)
+        plan = plan_from_dse(g.name, dev.name, res,
+                             microbatch=spec.microbatches)
+
+    prov = {"compiled_by": "repro.api.compile",
+            "strategy": spec.strategy,
+            "device": _device_name(spec, plan),
+            "seed": spec.seed}
+    if autotune_result is not None:
+        prov.update({
+            "s_per_cycle": autotune_result.calibration.s_per_cycle,
+            "autotune_digest": _autotune_digest(autotune_result),
+            "autotune_candidates": len(autotune_result.trajectory),
+            # the search's own knobs — a caller-supplied cfg may differ
+            # from the spec's, and provenance records what actually ran
+            "autotune_seed": cfg.seed,
+            "autotune_kernel_mode": cfg.kernel_mode,
+            "baseline_fps": autotune_result.baseline_fps,
+            "best_fps": autotune_result.best_fps,
+        })
+    for k, v in prov.items():
+        plan.provenance.setdefault(k, v)
+    return plan, autotune_result
+
+
+def compile(spec: CompileSpec) -> "Compiled":
+    """The toolflow entry point: resolve, search, lower — one call.
+
+    Resolves the graph through the model registry, produces an
+    :class:`~repro.core.plan.ExecutionPlan` per ``spec.strategy``, lowers
+    it per ``spec.mode``, and returns a :class:`Compiled` artifact that can
+    run, serve, report, and persist itself.  Numerics are bit-identical to
+    calling the underlying ``lower_plan`` / ``lower_plan_pipelined``
+    directly with the same plan and seed.
+    """
+    spec.validate()
+    g = _resolve_graph(spec)
+    plan, autotune_result = build_plan(spec, g)
+    km = spec.resolved_kernel_mode()
+
+    if spec.mode == "reference":
+        from .runtime.executor import reference_pipeline
+        executor = reference_pipeline(g, seed=spec.seed)
+    elif spec.mode == "staged":
+        from .runtime.executor import lower_plan
+        executor = lower_plan(g, plan, kernel_mode=km, seed=spec.seed,
+                              interpret=spec.interpret)
+    else:                                     # "pipelined"
+        from .runtime.streamer import lower_plan_pipelined
+        B = spec.microbatches
+        if autotune_result is not None:       # serve at the measured depth
+            B = autotune_result.microbatches
+        executor = lower_plan_pipelined(
+            g, plan, microbatches=B, kernel_mode=km, seed=spec.seed,
+            interpret=spec.interpret, placement=spec.placement)
+
+    return Compiled(spec=spec, graph=g, device=_device_name(spec, plan),
+                    plan=plan, executor=executor,
+                    autotune_result=autotune_result)
+
+
+@dataclasses.dataclass
+class Compiled:
+    """A deployable compiled design: executor + plan + provenance.
+
+    ``run(x)`` executes (staged/reference: one ``(m, c)`` frame ->
+    ``(L,)``; pipelined: a ``(B, m, c)`` stream -> ``(B, L)``, or a single
+    frame, broadcast through the pipeline, -> ``(L,)``).  ``serve()``
+    wraps the pipelined executor in a :class:`GraphStreamServer`;
+    ``report()`` unifies the Spill/Stream/Calibration reports; ``save`` /
+    ``load`` round-trip a versioned plan artifact that reproduces
+    bit-identically in a fresh process (weights are seeded).
+    """
+    spec: CompileSpec
+    graph: Graph
+    device: str
+    plan: ExecutionPlan | None
+    executor: Any                    # LoweredPipeline | StreamingExecutor
+    autotune_result: Any = None      # optim.autotune.AutotuneResult
+
+    @property
+    def model(self) -> str:
+        return self.graph.name
+
+    @property
+    def mode(self) -> str:
+        return self.spec.mode
+
+    @property
+    def strategy(self) -> str:
+        """Where the plan's decisions came from.  Reads the plan's own
+        provenance when present, so a loaded artifact (whose spec strategy
+        is necessarily "manual-plan" — decisions are baked in) still
+        reports and re-saves the strategy that produced it."""
+        if self.plan is not None and "strategy" in self.plan.provenance:
+            return self.plan.provenance["strategy"]
+        return self.spec.strategy
+
+    def __call__(self, x):
+        return self.run(x)
+
+    def run(self, x):
+        import jax.numpy as jnp
+        x = jnp.asarray(x)
+        if self.mode == "pipelined" and x.ndim == 2:
+            # single-frame convenience: broadcast through the stream,
+            # every slot computes the same frame — return one output
+            B = self.executor.microbatches
+            return self.executor(jnp.broadcast_to(x, (B,) + x.shape))[0]
+        return self.executor(x)
+
+    def input_shape(self) -> tuple[int, int]:
+        return exec_input_shape(self.graph)
+
+    # -- unified reporting ----------------------------------------------------
+    def report(self) -> dict:
+        """One dict over all report families the toolflow produced:
+        SpillReport (staged) / StreamReport (pipelined) summaries under
+        ``traffic``, plan provenance, and — when the autotuner ran — its
+        summary incl. the CalibrationReport."""
+        out = {
+            "model": self.model,
+            "device": self.device,
+            "mode": self.mode,
+            "strategy": self.strategy,
+            "kernel_mode": self.spec.resolved_kernel_mode(),
+            "schema_version": (self.plan.schema_version if self.plan
+                               else PLAN_SCHEMA_VERSION),
+            "n_stages": self.plan.n_stages if self.plan else 1,
+            "traffic": self.executor.report.summary(),
+        }
+        if self.plan is not None:
+            out["provenance"] = dict(self.plan.provenance)
+        if self.autotune_result is not None:
+            out["autotune"] = self.autotune_result.summary()
+        return out
+
+    # -- serving --------------------------------------------------------------
+    def serve(self, **kw):
+        """Batched streaming front-end around this design.
+
+        Reuses the pipelined executor when this artifact is already
+        pipelined and no overrides are given; otherwise re-lowers the same
+        plan pipelined with ``kw`` applied as :class:`CompileSpec`
+        overrides (e.g. ``microbatches=16``).  Unless overridden, the
+        stream depth follows the current executor's (so an autotuned
+        artifact keeps serving at the depth the search measured at)."""
+        from .serving.engine import GraphStreamServer
+        if self.mode != "pipelined" and self.plan is None:
+            raise ValueError(
+                'mode="reference" compiles are plan-free and cannot be '
+                'served; compile with mode="staged"/"pipelined" (any '
+                "strategy) to get a servable plan")
+        if self.mode == "pipelined" and not kw:
+            sx = self.executor
+        else:
+            kw.setdefault("microbatches",
+                          getattr(self.executor, "microbatches",
+                                  self.spec.microbatches))
+            sx = compile(dataclasses.replace(
+                self.spec, mode="pipelined", strategy="manual-plan",
+                plan=self.plan, **kw)).executor
+        srv = GraphStreamServer(executor=sx)
+        srv.autotune_result = self.autotune_result
+        return srv
+
+    # -- persistence ----------------------------------------------------------
+    def save(self, path) -> pathlib.Path:
+        """Write the versioned compile artifact (JSON): the plan with its
+        provenance, the graph structure (so custom-built graphs reload
+        exactly, without the model registry), plus every spec knob ``load``
+        needs to re-lower it."""
+        path = pathlib.Path(path)
+        B = (self.executor.microbatches if self.mode == "pipelined"
+             else self.spec.microbatches)
+        payload = {
+            "artifact": ARTIFACT_KIND,
+            "artifact_schema_version": ARTIFACT_SCHEMA_VERSION,
+            "plan_schema_version": (self.plan.schema_version if self.plan
+                                    else PLAN_SCHEMA_VERSION),
+            "model": self.model,
+            "device": self.device,
+            "mode": self.mode,
+            "strategy": self.strategy,   # decision origin: save/load-stable
+            "kernel_mode": self.spec.resolved_kernel_mode(),
+            "microbatches": B,
+            "seed": self.spec.seed,
+            "placement": self.spec.placement,
+            "graph": self.graph.to_json_dict(),
+            "plan": (json.loads(self.plan.to_json())
+                     if self.plan is not None else None),
+        }
+        path.write_text(json.dumps(payload, indent=1))
+        return path
+
+    @staticmethod
+    def load(path) -> "Compiled":
+        """Reconstruct a saved artifact and re-lower it.
+
+        The artifact bakes the searched decisions in, so loading never
+        re-runs DSE or the autotuner (``strategy`` becomes "manual-plan")
+        and rebuilds the graph from the embedded structural dump; with the
+        stored seed the reconstructed executor is bit-identical — including
+        in a fresh process."""
+        d = json.loads(pathlib.Path(path).read_text())
+        if d.get("artifact") != ARTIFACT_KIND:
+            raise ValueError(f"{path}: not a {ARTIFACT_KIND} artifact")
+        if d.get("artifact_schema_version", 0) > ARTIFACT_SCHEMA_VERSION:
+            raise ValueError(
+                f"{path}: artifact schema v{d['artifact_schema_version']} is "
+                f"newer than this toolflow (v{ARTIFACT_SCHEMA_VERSION})")
+        plan = (ExecutionPlan.from_json(json.dumps(d["plan"]))
+                if d.get("plan") is not None else None)
+        model = (Graph.from_json_dict(d["graph"]) if d.get("graph")
+                 else d["model"])
+        spec = CompileSpec(
+            model=model, device=d["device"], strategy="manual-plan",
+            mode=d["mode"], kernel_mode=d["kernel_mode"],
+            microbatches=d["microbatches"], seed=d["seed"],
+            placement=d.get("placement", "auto"), plan=plan)
+        return compile(spec)
+
+
+# =============================================================================
+# Shared CLI surface (examples / benchmark / autotune entry points)
+# =============================================================================
+
+def add_compile_args(ap, *, default_model: str | None = "unet_exec",
+                     default_device: str = "u200",
+                     default_mode: str = "staged",
+                     models: dict | None = None,
+                     modes: tuple[str, ...] = MODES):
+    """Attach the canonical ``--model/--device/--mode`` flags to ``ap``.
+
+    Choices come from the registries (``EXEC_MODELS`` + ``PAPER_MODELS``
+    by default, or the narrower ``models`` dict), never from hand-kept
+    lists — a new registered builder is immediately reachable from every
+    CLI that uses this helper.  ``modes`` narrows the ``--mode`` choices
+    for CLIs where some modes make no sense (e.g. the plan-free
+    "reference" mode in the autotune CLI)."""
+    names = sorted(models if models is not None
+                   else {**EXEC_MODELS, **PAPER_MODELS})
+    ap.add_argument("--model", default=default_model, choices=names,
+                    help=f"model registry name (default: {default_model})")
+    ap.add_argument("--device", default=default_device,
+                    choices=sorted(ALL_DEVICES),
+                    help=f"device registry name (default: {default_device})")
+    ap.add_argument("--mode", default=default_mode, choices=list(modes),
+                    help=f"execution mode (default: {default_mode})")
+    return ap
+
+
+def spec_from_args(args, **overrides) -> CompileSpec:
+    """Build a :class:`CompileSpec` from ``add_compile_args`` output."""
+    kw: dict[str, Any] = {"model": args.model, "device": args.device,
+                          "mode": args.mode}
+    kw.update(overrides)
+    return CompileSpec(**kw)

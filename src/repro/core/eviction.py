@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 
 from . import compression
-from .graph import Edge, Graph
+from .graph import Graph
 
 # Two DMA-burst FIFOs; sized for a 64-beat burst each (words).
 DMA_FIFO_DEPTH = 128.0

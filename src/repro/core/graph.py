@@ -17,8 +17,7 @@ the FPGA-faithful reproduction (words = 8/16-bit fixed point, cycles at
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Iterable, Iterator
+from typing import Iterable, Iterator
 
 import networkx as nx
 
@@ -188,6 +187,38 @@ class Graph:
         """``N_G^in`` — the first node of the graph (unique source expected)."""
         srcs = self.sources()
         return srcs[0]
+
+    # -- serialisation --------------------------------------------------------
+    def to_json_dict(self) -> dict:
+        """JSON-able structural dump: vertices and edges in insertion order.
+
+        Order matters beyond aesthetics: ``in_edges`` feeds multi-input ops
+        (concat, add) their operands in predecessor insertion order, so the
+        round-trip must preserve it — ``from_json_dict`` re-adds nodes and
+        edges in exactly this order.  Mutable design state (``par``,
+        ``frag_ratio``, eviction flags) is included, so a dump taken after
+        a DSE run reproduces the explored graph, not the pristine one.
+        """
+        return {
+            "name": self.name,
+            "vertices": [dataclasses.asdict(self.g.nodes[n]["v"])
+                         for n in self.g.nodes],
+            # grouped by destination, predecessors in insertion order:
+            # re-adding in this sequence reproduces each node's operand
+            # order exactly (nx stores pred adjacency by insertion)
+            "edges": [dataclasses.asdict(e)
+                      for n in self.g.nodes for e in self.in_edges(n)],
+        }
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "Graph":
+        g = Graph(name=d["name"])
+        for vd in d["vertices"]:
+            g.add(Vertex(**vd))
+        for ed in d["edges"]:
+            e = Edge(**ed)
+            g.g.add_edge(e.src, e.dst, e=e)
+        return g
 
     # -- aggregate stats ------------------------------------------------------
     def total_macs(self) -> float:

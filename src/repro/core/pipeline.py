@@ -21,8 +21,6 @@ that have direct connection to the node v").
 """
 from __future__ import annotations
 
-import functools
-
 from .graph import Graph
 
 

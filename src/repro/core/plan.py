@@ -15,20 +15,34 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 from typing import Any
 
 from .dse import DSEResult
+
+_LOG = logging.getLogger(__name__)
+
+# On-disk plan format version.  Bump when ExecutionPlan/LayerPlan/StreamPlan
+# gain or change serialised fields; ``from_json`` migrates older payloads
+# forward (v1 = pre-provenance plans, before schema_version existed).
+PLAN_SCHEMA_VERSION = 2
 
 
 def _known_fields(cls) -> set[str]:
     return {f.name for f in dataclasses.fields(cls)}
 
 
-def _strict_kwargs(cls, d: dict) -> dict:
-    """Drop keys a (possibly older) dataclass does not know about, so plans
-    serialised by newer versions of the toolflow still load (forward
-    compatibility of the on-disk format)."""
+def _shim_kwargs(cls, d: dict, dropped: list[str], scope: str) -> dict:
+    """Migration shim: keep the keys ``cls`` knows, *collect* the rest.
+
+    Plans serialised by newer versions of the toolflow still load (forward
+    compatibility of the on-disk format), but unlike a silent filter every
+    dropped key is recorded in ``dropped`` (and logged by ``from_json``), so
+    forward-compat events are observable instead of invisible data loss."""
     known = _known_fields(cls)
+    for k in d:
+        if k not in known:
+            dropped.append(f"{scope}.{k}")
     return {k: v for k, v in d.items() if k in known}
 
 
@@ -66,6 +80,17 @@ class ExecutionPlan:
     # stage-internal schedule, so ``stage_layers`` sorts by this list when
     # present (layers not in the list keep insertion order, appended last).
     topo_order: list[str] = dataclasses.field(default_factory=list)
+    # On-disk format version + provenance of the decisions.  ``provenance``
+    # is free-form JSON the toolflow stamps at compile time (strategy,
+    # device name, calibration s_per_cycle, autotune trajectory digest, ...)
+    # so a saved artifact explains where its decisions came from.
+    schema_version: int = PLAN_SCHEMA_VERSION
+    provenance: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # keys the from_json migration shim dropped (newer-writer forward
+    # compat); instance attribute set by from_json, never serialised
+    dropped_keys: tuple[str, ...] = dataclasses.field(
+        default=(), repr=False, compare=False, metadata={"transient": True})
 
     # -- serialisation --------------------------------------------------------
     def to_json(self) -> str:
@@ -73,16 +98,38 @@ class ExecutionPlan:
             if dataclasses.is_dataclass(o):
                 return dataclasses.asdict(o)
             raise TypeError(type(o))
-        return json.dumps(dataclasses.asdict(self), default=enc, indent=1)
+        d = dataclasses.asdict(self)
+        d.pop("dropped_keys", None)            # transient, not on-disk format
+        return json.dumps(d, default=enc, indent=1)
 
     @staticmethod
     def from_json(s: str) -> "ExecutionPlan":
-        d = _strict_kwargs(ExecutionPlan, json.loads(s))
-        d["layers"] = {k: LayerPlan(**_strict_kwargs(LayerPlan, v))
-                       for k, v in d["layers"].items()}
-        d["streams"] = [StreamPlan(**_strict_kwargs(StreamPlan, v))
-                        for v in d["streams"]]
-        return ExecutionPlan(**d)
+        raw = json.loads(s)
+        # v1 = pre-versioning plans (no schema_version field).  The loaded
+        # plan is migrated to the *current* in-memory shape, so it carries
+        # the current schema_version; the original is recorded in
+        # provenance so the migration stays observable on re-serialise.
+        orig_version = raw.get("schema_version", 1)
+        raw["schema_version"] = PLAN_SCHEMA_VERSION
+        dropped: list[str] = []
+        d = _shim_kwargs(ExecutionPlan, raw, dropped, "plan")
+        d["layers"] = {
+            k: LayerPlan(**_shim_kwargs(LayerPlan, v, dropped, f"layers[{k}]"))
+            for k, v in d["layers"].items()}
+        d["streams"] = [
+            StreamPlan(**_shim_kwargs(StreamPlan, v, dropped, f"streams[{i}]"))
+            for i, v in enumerate(d["streams"])]
+        plan = ExecutionPlan(**d)
+        plan.dropped_keys = tuple(dropped)
+        if orig_version != PLAN_SCHEMA_VERSION:
+            plan.provenance.setdefault("migrated_from_schema_version",
+                                       orig_version)
+        if dropped:
+            _LOG.warning(
+                "ExecutionPlan.from_json (model=%r, schema v%s): dropped %d "
+                "unknown key(s) written by a newer toolflow: %s",
+                plan.model, orig_version, len(dropped), ", ".join(dropped))
+        return plan
 
     def _order_key(self):
         pos = {n: i for i, n in enumerate(self.topo_order)}

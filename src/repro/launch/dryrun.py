@@ -21,7 +21,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, cell_applicable
 from repro.launch.hlo_analysis import (collective_stats, cost_stats,

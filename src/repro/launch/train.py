@@ -23,7 +23,6 @@ from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import init_params
 from repro.optim.adamw import AdamWConfig, init_opt_state
-from repro.runtime import sharding as SH
 from repro.runtime.fault import FaultConfig, FaultTolerantLoop
 from repro.runtime.steps import make_train_step
 

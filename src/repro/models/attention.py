@@ -8,8 +8,6 @@ flash kernel (kernels/flash_attention.py).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -10,7 +10,6 @@ Heterogeneous positions inside a group are unrolled in the scan body.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

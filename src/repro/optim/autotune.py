@@ -420,3 +420,51 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
                           best_fps=best_fps, baseline_fps=baseline_fps,
                           trajectory=trajectory, calibration=calib,
                           microbatches=cfg.microbatches)
+
+
+# =============================================================================
+# CLI entry point — routed through the compile façade (repro.api)
+# =============================================================================
+
+def main(argv: list[str] | None = None) -> None:
+    """``python -m repro.optim.autotune``: closed-loop search via the
+    façade.  Compiles ``strategy="autotune"`` and prints the summary; with
+    ``--save`` the winning design lands as a versioned ``Compiled``
+    artifact any fresh process can ``repro.Compiled.load`` and serve."""
+    import argparse
+
+    from repro.api import add_compile_args, compile as smof_compile, \
+        spec_from_args
+    from repro.core.builders import EXEC_MODELS
+
+    ap = argparse.ArgumentParser(prog="repro.optim.autotune")
+    # "reference" is plan-free — nothing to autotune — so it is not offered
+    add_compile_args(ap, models=EXEC_MODELS, default_model="unet_exec",
+                     default_mode="pipelined",
+                     modes=("staged", "pipelined"))
+    ap.add_argument("--candidates", type=int, default=12,
+                    help="evaluated plans incl. the seed")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the AutotuneResult trajectory as JSON")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="save the compiled winner as a Compiled artifact")
+    args = ap.parse_args(argv)
+
+    cfg = AutotuneConfig(n_candidates=args.candidates,
+                         microbatches=args.microbatches, seed=args.seed)
+    compiled = smof_compile(spec_from_args(
+        args, strategy="autotune", autotune_cfg=cfg, seed=args.seed,
+        microbatches=args.microbatches))
+    res = compiled.autotune_result
+    print(json.dumps(res.summary(), indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(res.to_json())
+    if args.save:
+        print(f"saved: {compiled.save(args.save)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,6 @@ over (data, model) via auto axes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -427,6 +427,10 @@ def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
     one stage — the numerical baseline every plan must match (lossless
     codecs) or approximate (BFP8).
 
+    This is the low-level entry; the documented path is the compile façade
+    (``repro.compile(CompileSpec(mode="staged"))``), which produces
+    bit-identical executors and adds search, serving, and persistence.
+
     kernel_mode: "pallas" dispatches fragmented matmuls and the BFP8 codec
     to the Pallas kernels (interpret-mode off TPU), "reference" uses the
     pure-jnp oracles, "auto" picks pallas on TPU and reference elsewhere.

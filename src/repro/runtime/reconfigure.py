@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import bfp8_decode, bfp8_encode
-from repro.models import forward, project_logits
+from repro.models import project_logits
 from repro.models.config import ArchConfig
 from repro.models.model import _embed, apply_norm
 

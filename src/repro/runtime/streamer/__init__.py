@@ -10,6 +10,11 @@ microbatches — stage ``j`` processes microbatch ``b`` while stage ``j+1``
 processes ``b-1`` — so steady-state throughput tracks Eq. 6's
 ``1/max_j(L_j)`` slowest-stage model instead.
 
+The documented entry point is the compile façade —
+``repro.compile(CompileSpec(mode="pipelined", ...))`` — which lowers
+through :func:`lower_plan_pipelined` bit-identically; the names below
+remain public for direct use.
+
 Public API (everything re-exported here; the per-name contracts)
 ----------------------------------------------------------------
 

@@ -233,13 +233,26 @@ class GraphStreamServer:
     queue into length-``B`` streams (zero-padding the tail — padding frames
     are executed as pipeline bubbles and dropped), runs each stream through
     the one jitted multi-microbatch step, and hands results back by ticket.
+
+    Construction goes through the compile façade (``repro.api``): pass a
+    ready :class:`~repro.api.CompileSpec` (``spec=``), an already-lowered
+    ``StreamingExecutor`` (``executor=``, what ``Compiled.serve()`` does),
+    or the legacy ``(g, plan, microbatches=..., **lowering knobs)`` form —
+    which is folded into a spec, so the lowering-kwarg plumbing lives in
+    exactly one place.
     """
 
-    def __init__(self, g, plan, *, microbatches: int = 8, **lower_kw):
-        from repro.runtime.streamer import lower_plan_pipelined
-        self.executor = lower_plan_pipelined(
-            g, plan, microbatches=microbatches, **lower_kw)
-        self.microbatches = microbatches
+    def __init__(self, g=None, plan=None, *, microbatches: int = 8,
+                 executor=None, spec=None, **lower_kw):
+        from repro.api import CompileSpec, compile as smof_compile
+        if executor is None:
+            if spec is None:
+                spec = CompileSpec(model=g, strategy="manual-plan",
+                                   mode="pipelined", plan=plan,
+                                   microbatches=microbatches, **lower_kw)
+            executor = smof_compile(spec).executor
+        self.executor = executor
+        self.microbatches = executor.microbatches
         self.stats = StreamServerStats()
         self.autotune_result = None          # set by .autotuned()
         self._pending: list[tuple[int, np.ndarray]] = []
@@ -251,20 +264,20 @@ class GraphStreamServer:
                   ) -> "GraphStreamServer":
         """Serve the *measured-best* plan instead of the default DSE plan.
 
-        Runs the closed-loop autotuner (``repro.optim.autotune``) over
-        executable graph ``g`` on device view ``dev`` — every candidate is
-        executed through the pipelined streamer — then builds the server
-        around the winning plan at the autotuner's microbatch depth.  The
-        full :class:`~repro.optim.autotune.AutotuneResult` (trajectory +
+        Compiles ``strategy="autotune"`` through the façade: the closed
+        loop (``repro.optim.autotune``) executes every candidate through
+        the pipelined streamer, and the server is built around the winning
+        plan at the autotuner's microbatch depth.  The full
+        :class:`~repro.optim.autotune.AutotuneResult` (trajectory +
         calibration report) is kept on ``server.autotune_result``.
         """
-        from repro.optim.autotune import AutotuneConfig, autotune
+        from repro.api import CompileSpec, compile as smof_compile
+        from repro.optim.autotune import AutotuneConfig
         cfg = autotune_cfg or AutotuneConfig()
-        result = autotune(g, dev, cfg)
-        srv = cls(g, result.best_plan, microbatches=cfg.microbatches,
-                  **lower_kw)
-        srv.autotune_result = result
-        return srv
+        compiled = smof_compile(CompileSpec(
+            model=g, device=dev, strategy="autotune", mode="pipelined",
+            autotune_cfg=cfg, microbatches=cfg.microbatches, **lower_kw))
+        return compiled.serve()
 
     @property
     def report(self):

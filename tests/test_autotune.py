@@ -106,7 +106,6 @@ class TestAutotune:
 
     def test_calibrated_hook_plugs_into_stage_latencies(self):
         from repro.runtime.streamer import stage_latencies
-        from repro.optim.autotune import _genome_from_plan, _plan_from_genome
         g = build_unet_exec()
         res = _tune(g)
         hook = calibrated_latency_hook(res.calibration.s_per_cycle)
@@ -127,7 +126,7 @@ class TestAutotune:
 
     def test_default_measure_is_wall_clock(self):
         """The real measurement path still runs (one tiny candidate)."""
-        import jax, jax.numpy as jnp
+        import jax.numpy as jnp
         from repro.core import exec_input_shape
         from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan
         from repro.runtime.streamer import lower_plan_pipelined
@@ -150,8 +149,6 @@ class TestServingIntegration:
         import numpy as np
         from repro.serving.engine import GraphStreamServer
         from repro.core import exec_input_shape
-        import repro.optim.autotune as at
-
         g = build_unet_exec(positions=32, levels=2)
         cfg = AutotuneConfig(n_candidates=3, microbatches=2,
                              kernel_mode="reference")

@@ -1,17 +1,15 @@
 """Unit tests for the SMOF core: graph IR, pipeline-depth model (Eq. 8-11),
 eviction (Eq. 1-2), fragmentation (Eq. 3-4), partitioning (Eq. 5-6)."""
-import math
-
 import pytest
 
-from repro.core import (DSEConfig, Graph, U200, Vertex, ZCU102,
+from repro.core import (Graph, U200, Vertex,
                         build_unet, candidate_evictions,
                         candidate_fragmentations, apply_eviction,
                         apply_fragmentation, evaluate_eviction,
                         evaluate_fragmentation, initial_partition,
                         initiation_interval, initiation_rate, interval_prev,
                         latency_s, merge, Partitioning, pipeline_depth,
-                        subgraph_cost, throughput_fps, vertex_delays)
+                        throughput_fps, vertex_delays)
 from repro.core.eviction import DMA_DELAY_CYCLES, DMA_FIFO_DEPTH
 from repro.core.fragmentation import weight_consumption_rate
 

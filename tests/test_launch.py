@@ -5,7 +5,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ARCHS, SHAPES
 from repro.launch.mesh import make_host_mesh

@@ -1,11 +1,9 @@
 """Hypothesis property tests for system-level invariants of the SMOF core."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Graph, U200, Vertex
-from repro.core.partition import (Partitioning, initial_partition, latency_s,
-                                  merge)
+from repro.core.partition import initial_partition, latency_s, merge
 from repro.core.pipeline import (initiation_interval, pipeline_depth,
                                  vertex_delays)
 
@@ -149,6 +147,88 @@ def test_jax_padded_roundtrip_matches_numpy_codec(m, c, seed):
     for r in range(m):
         err = np.abs(got[r] - x[r])
         assert np.all(err <= _bfp8_block_error_bound(xp[r])[:c])
+
+
+# =============================================================================
+# ExecutionPlan serialisation — the compile façade's on-disk artifact
+# =============================================================================
+
+_CODECS = ("none", "rle", "huffman", "bfp8")
+
+
+def _plan_from_draws(n_layers, stages, fracs, codec_ids, tp, extra):
+    """Deterministically build a nested plan from integer draws."""
+    from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan
+
+    names = [f"v{i}" for i in range(n_layers)]
+    cur = 0
+    layers = {}
+    for i, n in enumerate(names):
+        cur = max(cur, stages[i % len(stages)])       # stages non-decreasing
+        layers[n] = LayerPlan(
+            name=n, stage=cur, tp_parallelism=1 + tp[i % len(tp)],
+            weight_static_fraction=fracs[i % len(fracs)] / 8.0,
+            weight_stream_codec=_CODECS[codec_ids[i % len(codec_ids)] % 4])
+    streams = [StreamPlan(names[i], names[i + 1],
+                          evicted=bool(codec_ids[i % len(codec_ids)] % 2),
+                          codec=_CODECS[codec_ids[i % len(codec_ids)] % 4])
+               for i in range(n_layers - 1)]
+    return ExecutionPlan(
+        model="prop", device="dev", n_stages=cur + 1, layers=layers,
+        streams=streams, remat="none", microbatch=1 + extra,
+        est_throughput_fps=extra / 7.0, est_latency_s=extra * 1e-3,
+        topo_order=list(names),
+        provenance={f"k{i}": i for i in range(extra)})
+
+
+@given(st.integers(1, 9),
+       st.lists(st.integers(0, 3), min_size=4, max_size=4),
+       st.lists(st.integers(0, 8), min_size=4, max_size=4),
+       st.lists(st.integers(0, 7), min_size=4, max_size=4),
+       st.lists(st.integers(0, 3), min_size=4, max_size=4),
+       st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_plan_json_roundtrip_bit_exact(n_layers, stages, fracs, codec_ids,
+                                       tp, extra):
+    """to_json -> from_json round-trips nested LayerPlan/StreamPlan
+    dataclasses bit-exactly: dataclass-equal AND byte-equal re-serialised."""
+    from repro.core.plan import ExecutionPlan, PLAN_SCHEMA_VERSION
+
+    plan = _plan_from_draws(n_layers, stages, fracs, codec_ids, tp, extra)
+    s = plan.to_json()
+    back = ExecutionPlan.from_json(s)
+    assert back == plan                       # nested dataclass equality
+    assert back.to_json() == s                # bit-exact on the wire
+    assert back.dropped_keys == ()            # nothing migrated away
+    assert back.schema_version == PLAN_SCHEMA_VERSION
+
+
+@given(st.integers(1, 6), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_plan_unknown_keys_are_collected(n_layers, n_extra):
+    """Forward-compat is observable: every key a newer writer added is in
+    ``dropped_keys`` (per scope), and the known payload is untouched."""
+    import json as _json
+
+    from repro.core.plan import ExecutionPlan
+
+    plan = _plan_from_draws(n_layers, [0, 1, 1, 2], [8] * 4, [0] * 4,
+                            [0] * 4, 0)
+    d = _json.loads(plan.to_json())
+    lname = next(iter(d["layers"]))
+    expect = set()
+    for i in range(n_extra):
+        d[f"new{i}"] = i
+        expect.add(f"plan.new{i}")
+    d["layers"][lname]["new_layer_knob"] = 1
+    expect.add(f"layers[{lname}].new_layer_knob")
+    if d["streams"]:
+        d["streams"][0]["new_stream_knob"] = 2
+        expect.add("streams[0].new_stream_knob")
+    back = ExecutionPlan.from_json(_json.dumps(d))
+    assert set(back.dropped_keys) == expect
+    assert back.layers == plan.layers
+    assert back.streams == plan.streams
 
 
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))

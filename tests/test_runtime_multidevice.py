@@ -1,13 +1,11 @@
 """Multi-device runtime tests: sharding rules, step lowering, gradient
 compression — run in subprocesses with XLA host-device placeholders, since
 device count locks at first jax init."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -29,8 +29,7 @@ from repro.core import (DSEConfig, build_unet_exec, build_yolo_head_exec,
 from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan
 from repro.core.resources import Device
 from repro.runtime.executor import lower_plan
-from repro.runtime.streamer import (PipelineSchedule, RingBuffer,
-                                    StreamingExecutor, StreamReport,
+from repro.runtime.streamer import (RingBuffer, StreamReport,
                                     build_queues, build_schedule,
                                     eq5_sequential_time, eq6_pipeline_time,
                                     lower_plan_pipelined,

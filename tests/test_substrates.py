@@ -1,6 +1,5 @@
 """Substrate tests: data pipeline, checkpointing, fault tolerance, optimizer,
 gradient compression, serving engine, staged executor."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.checkpoint.store import CheckpointStore
 from repro.configs import ARCHS
 from repro.data.pipeline import DataConfig, TokenPipeline, write_token_file
-from repro.models import init_params, lm_loss, project_logits, forward
+from repro.models import init_params, project_logits, forward
 from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
                                schedule)
 from repro.optim.compress import (dequantize_int8, ef_compress_tree,
