@@ -119,8 +119,10 @@ def _emit_row(r: dict, us_per_call: float) -> None:
 
 
 def run(smoke: bool = False, pipelined: bool = False,
-        microbatches: int = 8, json_path: str | None = None) -> list[dict]:
+        microbatches: int = 8, json_path: str | None = None,
+        trace_path: str | None = None) -> list[dict]:
     rows: list[dict] = []
+    model_check = None
     names = MODEL_NAMES[:1] if smoke else MODEL_NAMES
     repeats = 3 if smoke else 5
     for name in names:
@@ -143,9 +145,10 @@ def run(smoke: bool = False, pipelined: bool = False,
 
             B = microbatches
             # same plan, pipelined — no re-search, just a re-lowering
-            sx = smof_compile(dataclasses.replace(
+            piped = smof_compile(dataclasses.replace(
                 staged.spec, mode="pipelined", strategy="manual-plan",
-                plan=plan, microbatches=B)).executor
+                plan=plan, microbatches=B))
+            sx = piped.executor
             lat = measured_stage_latencies(sx, x)  # compiles stage fns only
             fps_eq5 = 1.0 / eq5_sequential_time(lat)
             fps_eq6 = 1.0 / eq6_pipeline_time(lat)
@@ -168,9 +171,24 @@ def run(smoke: bool = False, pipelined: bool = False,
                                  1e6 / us_frame, fps_eq5, fps_eq6, rel_p, B))
                 _emit_row(rows[-1], us_frame)
 
+                # --trace: narrate the first multi-stage pipelined config
+                # (per-tick spans + ModelCheck) into a Chrome trace file
+                if (trace_path and model_check is None
+                        and plan.n_stages > 1):
+                    _, mc = piped.trace(x, path=trace_path)
+                    model_check = mc.summary()
+                    emit(f"e2e/{name}_{'+'.join(codecs)}"
+                         f"_s{plan.n_stages}_trace",
+                         us_frame,
+                         f"ok={mc.ok} ticks={mc.ticks_measured} "
+                         f"steady={mc.steady_measured} "
+                         f"max_rel_err={mc.max_stage_rel_err:.4g} "
+                         f"bottleneck={mc.bottleneck_predicted}")
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"schema": list(ROW_SCHEMA), "rows": rows,
+                       "model_check": model_check,
                        "generated_unix": time.time(),
                        "backend": jax.default_backend()}, f, indent=1)
     return rows
@@ -184,7 +202,7 @@ def run(smoke: bool = False, pipelined: bool = False,
 # .trajectory_rows()); one CSV line per candidate under autotune/<model>/
 AUTOTUNE_SCHEMA = ("model", "candidate", "move", "accepted", "best_so_far",
                    "n_stages", "evicted", "fragged", "fps_measured",
-                   "fps_eq6_pre", "fps_eq6_cal")
+                   "fps_eq6_pre", "fps_eq6_cal", "bottleneck_stage")
 
 # smoke = the ISSUE 3 acceptance pair: UNet + the hardest memory-wall case
 AUTOTUNE_SMOKE_MODELS = ("unet_exec", "x3d_exec")
@@ -246,6 +264,10 @@ def main(argv: list[str] | None = None) -> None:
                     help="autotune candidate budget (default 8 smoke / 16)")
     ap.add_argument("--autotune-json", default=None, metavar="PATH",
                     help="write the autotune trajectory as a JSON artifact")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --pipelined: write a Chrome trace (per-tick "
+                         "spans + ModelCheck) of the first multi-stage "
+                         "config; open in Perfetto / chrome://tracing")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.autotune:
@@ -254,7 +276,8 @@ def main(argv: list[str] | None = None) -> None:
                      json_path=args.autotune_json)
         return
     run(smoke=args.smoke, pipelined=args.pipelined,
-        microbatches=args.microbatches, json_path=args.json)
+        microbatches=args.microbatches, json_path=args.json,
+        trace_path=args.trace if args.pipelined else None)
 
 
 if __name__ == "__main__":

@@ -30,6 +30,9 @@ def main() -> None:
                     help="lower the plan and run it (needs a *_exec model)")
     ap.add_argument("--save", default=None, metavar="PATH",
                     help="with --execute: save the Compiled artifact")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --execute: run once traced and write a "
+                         "Chrome trace-event JSON (open in Perfetto)")
     args = ap.parse_args()
 
     spec = spec_from_args(
@@ -81,6 +84,14 @@ def main() -> None:
                               jnp.float32)
         y = compiled.run(x)
         print(f"\nexecuted ({compiled.mode}): output shape {tuple(y.shape)}")
+        if args.trace:
+            _, mc = compiled.trace(x, path=args.trace)
+            print(f"trace written: {args.trace}")
+            if mc is not None:
+                print(f"model check: ok={mc.ok} "
+                      f"ticks={mc.ticks_measured}/{mc.ticks_predicted} "
+                      f"steady={mc.steady_measured}/{mc.steady_predicted} "
+                      f"max_stage_rel_err={mc.max_stage_rel_err}")
         print(f"unified report: {compiled.report()}")
         if args.save:
             print(f"saved artifact: {compiled.save(args.save)} "

@@ -17,15 +17,22 @@ executor/serving stack.
 _API_NAMES = ("CompileSpec", "Compiled", "compile", "build_plan",
               "add_compile_args", "spec_from_args", "MODES", "STRATEGIES")
 
-__all__ = list(_API_NAMES)
+# telemetry surface (repro.obs), same lazy resolution
+_OBS_NAMES = ("ObsConfig", "TraceRecorder", "NullRecorder", "ModelCheck",
+              "LatencyHistogram", "validate_chrome_trace")
+
+__all__ = list(_API_NAMES) + list(_OBS_NAMES)
 
 
 def __getattr__(name):
     if name in _API_NAMES:
         from . import api
         return getattr(api, name)
+    if name in _OBS_NAMES:
+        from . import obs
+        return getattr(obs, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(set(globals()) | set(_API_NAMES))
+    return sorted(set(globals()) | set(_API_NAMES) | set(_OBS_NAMES))

@@ -56,6 +56,7 @@ from .core.dse import DSEConfig, run_dse
 from .core.graph import Graph
 from .core.plan import ExecutionPlan, PLAN_SCHEMA_VERSION, plan_from_dse
 from .core.resources import ALL_DEVICES, Device, get_device
+from .obs.trace import NULL_RECORDER, ObsConfig, TraceRecorder
 
 MODES = ("reference", "staged", "pipelined")
 STRATEGIES = ("dse", "autotune", "manual-plan")
@@ -90,6 +91,7 @@ class CompileSpec:
     dse: DSEConfig | None = None       # strategy="dse" knobs
     interpret: bool | None = None      # Pallas interpret-mode override
     placement: str = "auto"            # pipelined: interleave | shard_map
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
     def resolved_kernel_mode(self) -> str:
         if self.use_pallas is None:
@@ -164,7 +166,9 @@ def build_plan(spec: CompileSpec, graph: Graph | None = None
         cfg = spec.autotune_cfg or AutotuneConfig(
             microbatches=spec.microbatches,
             kernel_mode=spec.resolved_kernel_mode(), seed=spec.seed)
-        autotune_result = autotune(g, _resolve_device(spec), cfg)
+        rec = TraceRecorder() if spec.obs.enabled else NULL_RECORDER
+        autotune_result = autotune(g, _resolve_device(spec), cfg,
+                                   recorder=rec)
         plan = autotune_result.best_plan
     else:                                     # "dse": Algorithm 1
         dev = _resolve_device(spec)
@@ -247,6 +251,8 @@ class Compiled:
     plan: ExecutionPlan | None
     executor: Any                    # LoweredPipeline | StreamingExecutor
     autotune_result: Any = None      # optim.autotune.AutotuneResult
+    model_check: Any = None          # obs.ModelCheck, set by trace()
+    recorder: Any = None             # obs.TraceRecorder, set by trace()
 
     @property
     def model(self) -> str:
@@ -303,7 +309,50 @@ class Compiled:
             out["provenance"] = dict(self.plan.provenance)
         if self.autotune_result is not None:
             out["autotune"] = self.autotune_result.summary()
+        if self.model_check is not None:
+            out["model_check"] = self.model_check.summary()
         return out
+
+    # -- tracing --------------------------------------------------------------
+    def trace(self, x=None, *, path=None, recorder=None):
+        """Execute once with telemetry on; returns ``(outputs, ModelCheck)``.
+
+        Pipelined designs run tick-by-tick through
+        ``StreamingExecutor.run_traced`` — per-tick wall-clock spans, queue
+        counters, spill bytes — and yield a full
+        :class:`~repro.obs.ModelCheck` (measured vs Eq. 5/6 latencies,
+        Eq. 1 queue bounds), which subsequent :meth:`report` calls include.
+        Staged/reference designs record one frame span plus spill counters
+        and yield ``model_check=None``.
+
+        ``x=None`` synthesizes a seeded input stream; ``path`` (default:
+        ``spec.obs.trace_path``) writes the Chrome trace-event JSON —
+        open it in Perfetto / ``chrome://tracing``.
+        """
+        import jax.numpy as jnp
+        import numpy as np
+
+        rec = recorder if recorder is not None else TraceRecorder()
+        m, c = self.input_shape()
+        if x is None:
+            rng = np.random.default_rng(self.spec.seed)
+            x = jnp.asarray(rng.normal(size=(m, c)).astype(np.float32))
+        else:
+            x = jnp.asarray(x)
+        mc = None
+        if self.mode == "pipelined":
+            if x.ndim == 2:
+                B = self.executor.microbatches
+                x = jnp.broadcast_to(x, (B,) + x.shape)
+            y, mc = self.executor.run_traced(x, rec)
+        else:
+            y = self.executor.run_traced(x, rec)
+        self.model_check = mc
+        self.recorder = rec
+        path = path if path is not None else self.spec.obs.trace_path
+        if path is not None and rec.enabled:
+            rec.save(path)
+        return y, mc
 
     # -- serving --------------------------------------------------------------
     def serve(self, **kw):
@@ -356,6 +405,7 @@ class Compiled:
             "microbatches": B,
             "seed": self.spec.seed,
             "placement": self.spec.placement,
+            "obs": self.spec.obs.to_dict(),
             "graph": self.graph.to_json_dict(),
             "plan": (json.loads(self.plan.to_json())
                      if self.plan is not None else None),
@@ -387,7 +437,8 @@ class Compiled:
             model=model, device=d["device"], strategy="manual-plan",
             mode=d["mode"], kernel_mode=d["kernel_mode"],
             microbatches=d["microbatches"], seed=d["seed"],
-            placement=d.get("placement", "auto"), plan=plan)
+            placement=d.get("placement", "auto"), plan=plan,
+            obs=ObsConfig.from_dict(d.get("obs", {})))
         return compile(spec)
 
 

@@ -1,0 +1,41 @@
+"""repro.obs — streaming telemetry: spans, counters, model-vs-measured.
+
+Three layers, dependency-free so anything in the repo can import it:
+
+* :mod:`repro.obs.trace` — recorder primitives.  :class:`NullRecorder`
+  (the universal default: every hook is a no-op, zero cost when tracing
+  is off), :class:`TraceRecorder` (in-memory spans/counters with a
+  Chrome trace-event / Perfetto JSON exporter), ``validate_chrome_trace``
+  (schema check for emitted files) and :class:`LatencyHistogram`
+  (log-bucketed per-request latencies for serving).
+* :mod:`repro.obs.stream` — :class:`StreamTracer`, the per-tick narrator
+  for the pipelined streamer (tick/stage spans by 1F1B phase, queue
+  occupancy through the bounded rings, spill byte counters), plus
+  ``emit_spill_counters`` for the sequential executor's spill path.
+* :mod:`repro.obs.modelcheck` — :class:`ModelCheck` via ``check_stream``:
+  measured per-stage latencies, tick counts and queue depths vs the
+  Eq. 5/6 predictions and Eq. 1 capacities.
+
+Configuration travels as :class:`ObsConfig` on ``CompileSpec`` and
+round-trips through ``Compiled.save/load``.
+"""
+from .modelcheck import (ModelCheck, QueueDepthCheck, StageLatencyCheck,
+                         check_stream)
+from .stream import StreamTracer, emit_spill_counters
+from .trace import (NULL_RECORDER, LatencyHistogram, NullRecorder, ObsConfig,
+                    TraceRecorder, validate_chrome_trace)
+
+__all__ = [
+    "ObsConfig",
+    "NullRecorder",
+    "NULL_RECORDER",
+    "TraceRecorder",
+    "LatencyHistogram",
+    "validate_chrome_trace",
+    "StreamTracer",
+    "emit_spill_counters",
+    "ModelCheck",
+    "StageLatencyCheck",
+    "QueueDepthCheck",
+    "check_stream",
+]

@@ -1,0 +1,183 @@
+"""ModelCheck: the paper's analytical models vs the measured pipeline.
+
+SMOF's argument is analytical — Eq. 1 sizes the inter-stage buffers,
+Eq. 5/6 predict frame time from per-stage latencies — and the telemetry
+layer exists so those claims are *checkable* against a real run.  One
+:class:`ModelCheck` compares, for one pipelined executor:
+
+* **stage latencies** — the analytic per-stage ``L_j`` (initiation
+  interval in cycles, the model the DSE ranks partitions with) against
+  measured per-stage wall clock.  The two live in different units, so
+  the check fits one through-origin scale ``s_per_cycle`` (exactly the
+  autotuner's calibration regression) and reports the per-stage residual
+  error — a stage whose measured share deviates is where the model is
+  wrong;
+* **schedule** — the measured tick count and steady-state tick count
+  against the 1F1B diagram's ``T = B + S - 1`` / ``B - S + 1`` (the
+  Eq. 6 regime is exactly the steady ticks);
+* **queue depths** — each bounded ring's occupancy high-water mark and
+  stall counts against its Eq. 1 capacity; a queue that stalls or rides
+  its cap is mis-sized (the spill FIFO that would backpressure real
+  hardware).
+
+``check_stream`` builds one from a ``StreamReport``-like object plus the
+measurements a traced run produced; ``Compiled.report()`` surfaces the
+summary once ``Compiled.trace()`` has run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["StageLatencyCheck", "QueueDepthCheck", "ModelCheck",
+           "check_stream"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageLatencyCheck:
+    """One stage's predicted-vs-measured latency residual."""
+    stage: int
+    predicted_cycles: float        # analytic L_j (Eq. 5/6 input)
+    measured_s: float | None       # per-stage wall clock (None: not measured)
+    fitted_s: float | None         # predicted_cycles * s_per_cycle
+    rel_err: float | None          # (measured - fitted) / fitted
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueDepthCheck:
+    """One inter-stage ring vs its Eq. 1 capacity."""
+    edge: str
+    capacity: int
+    high_water: int
+    push_stalls: int
+    pop_stalls: int
+
+    @property
+    def ok(self) -> bool:
+        return (self.high_water <= self.capacity
+                and self.push_stalls == 0 and self.pop_stalls == 0)
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self) | {"ok": self.ok}
+
+
+@dataclasses.dataclass
+class ModelCheck:
+    """Measured-vs-model report for one pipelined run."""
+    stages: list[StageLatencyCheck]
+    queues: list[QueueDepthCheck]
+    s_per_cycle: float             # fitted measured-seconds per analytic cycle
+    ticks_predicted: int           # T = B + S - 1
+    ticks_measured: int | None
+    steady_predicted: int          # B - S + 1 (the Eq. 6 regime)
+    steady_measured: int | None
+
+    @property
+    def ticks_ok(self) -> bool:
+        return (self.ticks_measured is None
+                or (self.ticks_measured == self.ticks_predicted
+                    and self.steady_measured == self.steady_predicted))
+
+    @property
+    def queues_ok(self) -> bool:
+        return all(q.ok for q in self.queues)
+
+    @property
+    def bottleneck_predicted(self) -> int:
+        return max(range(len(self.stages)),
+                   key=lambda j: self.stages[j].predicted_cycles)
+
+    @property
+    def bottleneck_measured(self) -> int | None:
+        if any(s.measured_s is None for s in self.stages):
+            return None
+        return max(range(len(self.stages)),
+                   key=lambda j: self.stages[j].measured_s)
+
+    @property
+    def bottleneck_agree(self) -> bool | None:
+        m = self.bottleneck_measured
+        return None if m is None else m == self.bottleneck_predicted
+
+    @property
+    def max_stage_rel_err(self) -> float | None:
+        errs = [abs(s.rel_err) for s in self.stages if s.rel_err is not None]
+        return max(errs) if errs else None
+
+    @property
+    def ok(self) -> bool:
+        """Schedule walked as predicted and no queue is mis-sized.
+
+        Stage-latency residuals are reported, not gated — wall clock on a
+        shared host is noisy, and the residual's job is attribution."""
+        return self.ticks_ok and self.queues_ok
+
+    def summary(self) -> dict:
+        return {
+            "ok": self.ok,
+            "ticks_ok": self.ticks_ok,
+            "queues_ok": self.queues_ok,
+            "s_per_cycle": self.s_per_cycle,
+            "ticks": {"predicted": self.ticks_predicted,
+                      "measured": self.ticks_measured,
+                      "steady_predicted": self.steady_predicted,
+                      "steady_measured": self.steady_measured},
+            "bottleneck": {"predicted": self.bottleneck_predicted,
+                           "measured": self.bottleneck_measured,
+                           "agree": self.bottleneck_agree},
+            "max_stage_rel_err": self.max_stage_rel_err,
+            "stages": [s.summary() for s in self.stages],
+            "queues": [q.summary() for q in self.queues],
+        }
+
+
+def check_stream(report, *, stage_seconds=None, queue_stats=None,
+                 ticks_measured=None, steady_measured=None) -> ModelCheck:
+    """Build a :class:`ModelCheck` for one pipelined executor.
+
+    report
+        a ``StreamReport``-like: ``stage_latency`` (analytic cycles),
+        ``n_stages``, ``microbatches``, ``ticks``, ``queue_stats``.
+    stage_seconds
+        measured per-stage wall clock (``measured_stage_latencies``), or
+        ``None`` — latency checks then carry predictions only.
+    queue_stats
+        ``{edge: {capacity, high_water, push_stalls, pop_stalls}}`` from
+        a traced run; defaults to the report's lowering-time simulation.
+    ticks_measured / steady_measured
+        tick counts a traced run actually walked (``None``: not run).
+    """
+    pred = list(report.stage_latency)
+    meas = list(stage_seconds) if stage_seconds is not None else None
+    if meas is not None and len(meas) != len(pred):
+        raise ValueError(f"{len(meas)} measured stages vs "
+                         f"{len(pred)} predicted")
+    # through-origin least squares: the calibration regression of
+    # optim.autotune, one run's worth
+    s_per_cycle = 0.0
+    if meas is not None:
+        denom = sum(p * p for p in pred)
+        s_per_cycle = (sum(p * m for p, m in zip(pred, meas)) / denom
+                       if denom else 0.0)
+    stages = []
+    for j, p in enumerate(pred):
+        m = meas[j] if meas is not None else None
+        fitted = p * s_per_cycle if meas is not None else None
+        err = ((m - fitted) / fitted
+               if fitted else None)
+        stages.append(StageLatencyCheck(stage=j, predicted_cycles=p,
+                                        measured_s=m, fitted_s=fitted,
+                                        rel_err=err))
+    qs = queue_stats if queue_stats is not None else report.queue_stats
+    queues = [QueueDepthCheck(edge=e, capacity=st["capacity"],
+                              high_water=st["high_water"],
+                              push_stalls=st["push_stalls"],
+                              pop_stalls=st["pop_stalls"])
+              for e, st in sorted(qs.items())]
+    S, B = report.n_stages, report.microbatches
+    return ModelCheck(
+        stages=stages, queues=queues, s_per_cycle=s_per_cycle,
+        ticks_predicted=B + S - 1, ticks_measured=ticks_measured,
+        steady_predicted=max(0, B - S + 1), steady_measured=steady_measured)

@@ -48,6 +48,7 @@ from repro.core.graph import Graph
 from repro.core.pipeline import initiation_interval
 from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan, plan_from_dse
 from repro.core.resources import Device
+from repro.obs.trace import NULL_RECORDER
 from repro.runtime.executor import WEIGHT_KINDS
 from repro.runtime.streamer import (StreamingExecutor, eq5_sequential_time,
                                     eq6_pipeline_time,
@@ -103,6 +104,13 @@ class CandidateRecord:
     fps_eq6_cal: float = 0.0   # Eq. 6 with the fitted s_per_cycle
     best_so_far: bool = False
 
+    @property
+    def bottleneck_stage(self) -> int:
+        """The stage setting Eq. 6's ``max_j(L_j)`` for this candidate —
+        the attribution the search is otherwise blind to."""
+        return max(range(len(self.stage_cycles)),
+                   key=lambda j: self.stage_cycles[j])
+
 
 @dataclasses.dataclass
 class CalibrationReport:
@@ -141,6 +149,7 @@ class AutotuneResult:
     trajectory: list[CandidateRecord]
     calibration: CalibrationReport
     microbatches: int
+    recorder: object = None    # obs recorder the search narrated into
 
     def summary(self) -> dict:
         return {
@@ -166,6 +175,7 @@ class AutotuneResult:
             "evicted": r.n_evicted, "fragged": r.n_fragged,
             "fps_measured": r.fps_measured, "fps_eq6_pre": r.fps_eq6_pre,
             "fps_eq6_cal": r.fps_eq6_cal,
+            "bottleneck_stage": r.bottleneck_stage,
         } for r in self.trajectory]
 
     def to_json(self) -> str:
@@ -303,8 +313,8 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
              measure_fps: Callable[[StreamingExecutor, jax.Array], float]
              | None = None,
              measure_stages: Callable[[StreamingExecutor, jax.Array],
-                                      list[float]] | None = None
-             ) -> AutotuneResult:
+                                      list[float]] | None = None,
+             recorder=NULL_RECORDER) -> AutotuneResult:
     """Measured-in-the-loop plan search over executable graph ``g``.
 
     The seed candidate is the default DSE plan (``run_dse`` under
@@ -313,6 +323,10 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
     ``cfg.microbatches``-deep stream.  Returns the best measured plan, the
     full predicted-vs-measured trajectory, and the latency-model
     calibration fitted from every measured stage.
+
+    ``recorder`` (an ``obs`` recorder) narrates the search: one span per
+    candidate on the ``autotune`` track, carrying the move, acceptance,
+    measured fps and the bottleneck-stage attribution.
     """
     cfg = cfg or AutotuneConfig()
     rng = random.Random(cfg.seed)
@@ -350,20 +364,24 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
         plan = _plan_from_genome(g, topo, genome, model=g.name,
                                  device=dev.name,
                                  microbatch=cfg.microbatches)
-        sx = lower_plan_pipelined(g, plan, microbatches=cfg.microbatches,
-                                  kernel_mode=cfg.kernel_mode)
-        fps = measure_fps(sx, xs)
-        cyc = stage_latencies(g, plan)               # analytic, cycles
-        rec = CandidateRecord(
-            index=index, move=move, accepted=False,
-            n_stages=plan.n_stages,
-            n_evicted=sum(1 for s in plan.streams if s.evicted),
-            n_fragged=sum(1 for lp in plan.layers.values()
-                          if lp.weight_static_fraction < 1.0),
-            fps_measured=fps,
-            eq5_cycles=eq5_sequential_time(cyc),
-            eq6_cycles=eq6_pipeline_time(cyc),
-            stage_cycles=list(cyc))
+        with recorder.span(f"candidate{index}", track="autotune", cat=move,
+                           args={"candidate": index, "move": move}) as sa:
+            sx = lower_plan_pipelined(g, plan, microbatches=cfg.microbatches,
+                                      kernel_mode=cfg.kernel_mode)
+            fps = measure_fps(sx, xs)
+            cyc = stage_latencies(g, plan)           # analytic, cycles
+            rec = CandidateRecord(
+                index=index, move=move, accepted=False,
+                n_stages=plan.n_stages,
+                n_evicted=sum(1 for s in plan.streams if s.evicted),
+                n_fragged=sum(1 for lp in plan.layers.values()
+                              if lp.weight_static_fraction < 1.0),
+                fps_measured=fps,
+                eq5_cycles=eq5_sequential_time(cyc),
+                eq6_cycles=eq6_pipeline_time(cyc),
+                stage_cycles=list(cyc))
+            sa.update({"fps_measured": fps, "n_stages": rec.n_stages,
+                       "bottleneck_stage": rec.bottleneck_stage})
         return rec, plan, sx
 
     trajectory: list[CandidateRecord] = []
@@ -387,6 +405,11 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
             genome, cur_fps = cand, rec.fps_measured
             rec.accepted = True
             rec.stage_seconds = list(measure_stages(sx, x))
+        if recorder.enabled:
+            recorder.instant(f"{'accept' if accept else 'reject'}:{move}",
+                             track="autotune",
+                             args={"candidate": i,
+                                   "fps_measured": rec.fps_measured})
         if rec.fps_measured > best_fps:
             best_fps, best_plan, best_rec = rec.fps_measured, plan, rec
             rec.best_so_far = True
@@ -419,7 +442,8 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
     return AutotuneResult(model=g.name, device=dev.name, best_plan=best_plan,
                           best_fps=best_fps, baseline_fps=baseline_fps,
                           trajectory=trajectory, calibration=calib,
-                          microbatches=cfg.microbatches)
+                          microbatches=cfg.microbatches,
+                          recorder=recorder if recorder.enabled else None)
 
 
 # =============================================================================
@@ -450,18 +474,27 @@ def main(argv: list[str] | None = None) -> None:
                     help="write the AutotuneResult trajectory as JSON")
     ap.add_argument("--save", default=None, metavar="PATH",
                     help="save the compiled winner as a Compiled artifact")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace of the search (one span per "
+                         "candidate, with bottleneck-stage attribution)")
     args = ap.parse_args(argv)
+
+    from repro.obs import ObsConfig
 
     cfg = AutotuneConfig(n_candidates=args.candidates,
                          microbatches=args.microbatches, seed=args.seed)
     compiled = smof_compile(spec_from_args(
         args, strategy="autotune", autotune_cfg=cfg, seed=args.seed,
-        microbatches=args.microbatches))
+        microbatches=args.microbatches,
+        obs=ObsConfig(enabled=args.trace is not None,
+                      trace_path=args.trace)))
     res = compiled.autotune_result
     print(json.dumps(res.summary(), indent=1))
     if args.json:
         with open(args.json, "w") as f:
             f.write(res.to_json())
+    if args.trace and res.recorder is not None:
+        print(f"trace: {res.recorder.save(args.trace)}")
     if args.save:
         print(f"saved: {compiled.save(args.save)}")
 

@@ -387,6 +387,28 @@ class LoweredPipeline:
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.fn(self.params, x)
 
+    def run_traced(self, x: jax.Array, recorder=None) -> jax.Array:
+        """Run one frame, recording a ``frame`` span plus spill counters.
+
+        The sequential executor has no tick structure, so the telemetry is
+        one host-side wall-clock span per frame and one
+        ``emit_spill_counters`` round-trip per :class:`SpillRecord` (every
+        evicted edge crosses off-chip exactly once per frame here).  With
+        ``recorder=None`` this is exactly ``self(x)``.
+        """
+        from ..obs.stream import emit_spill_counters
+        from ..obs.trace import NULL_RECORDER
+
+        rec = NULL_RECORDER if recorder is None else recorder
+        with rec.span("frame", track="host",
+                      args={"graph": self.graph_name}):
+            y = self.fn(self.params, x)
+            jax.block_until_ready(y)
+        ts = rec.now()
+        for r in self.report.spills:
+            emit_spill_counters(rec, r, ts=ts)
+        return y
+
 
 def resolve_kernel_mode(kernel_mode: str,
                         interpret: bool | None) -> tuple[bool, bool]:

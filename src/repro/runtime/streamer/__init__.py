@@ -31,6 +31,11 @@ Lowering and execution (``pipeline.py``)
         ``(B, L)`` outputs, bit-for-bit what the sequential executor
         produces per microbatch; carries ``report``, the individually
         jitted ``stage_fns``, and ``zero_reads()`` for driving them.
+        ``sx.run_traced(xs, recorder)`` runs the same jitted tick body
+        tick-by-tick, emitting per-tick spans / queue counters / spill
+        bytes into an ``repro.obs`` recorder and returning a
+        :class:`~repro.obs.ModelCheck` (measured vs Eq. 5/6 and Eq. 1) —
+        bit-exact against ``sx(xs)``, zero-cost with the null recorder.
     ``StreamReport``
         :class:`~repro.runtime.executor.SpillReport` plus the schedule
         view: per-stage occupancy/stalls/latency, queue high-water marks,
@@ -61,10 +66,13 @@ Bounded inter-stage queues (``queues.py``)
     ``queue_specs(g, stage_of, out_shape, codec_of)`` / ``QueueSpec``
         One spec per stage-crossing edge; capacity in microbatch entries
         derives from Eq. 1's ``d_b' = 2·DMA_FIFO_DEPTH`` word budget,
-        floored at the two DMA-burst FIFOs' double buffer.
-    ``build_queues(specs)`` / ``RingBuffer``
+        floored at the two DMA-burst FIFOs' double buffer and at the
+        edge's stage distance (the executed shift-register depth).
+    ``build_queues(specs, recorder)`` / ``RingBuffer``
         The Python-side rings with occupancy high-water and push/pop
-        stall accounting (diagnostics, not flow control).
+        stall accounting (diagnostics, not flow control); with an
+        ``repro.obs`` recorder each push/pop also emits occupancy
+        counters and stall instants into the trace.
 """
 from .pipeline import (StreamingExecutor, StreamReport, lower_plan_pipelined,
                        measured_stage_latencies)

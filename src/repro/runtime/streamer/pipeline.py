@@ -36,6 +36,9 @@ import jax.numpy as jnp
 from ...core.graph import Graph
 from ...core.plan import ExecutionPlan
 from ...kernels.streamed_matmul import _round_up
+from ...obs.modelcheck import ModelCheck, check_stream
+from ...obs.stream import StreamTracer
+from ...obs.trace import NULL_RECORDER
 from ..executor import (BFP8_BLOCK, PlanAnalysis, SpillReport,
                         _make_offchip_hop, analyze_plan, apply_vertex,
                         bfp8_spill_decode, bfp8_spill_encode, init_params,
@@ -235,6 +238,12 @@ class StreamingExecutor:
     _zero_reads: Callable[[], dict]
     _decoders: dict
     _crossing: list[tuple[str, str]]
+    schedule: SCH.PipelineSchedule | None = None
+    _tick_fn: Callable | None = None
+    _carry0: Callable[[], dict] | None = None
+    _queue_specs: dict = dataclasses.field(default_factory=dict)
+    _stage_of: dict = dataclasses.field(default_factory=dict)
+    _stream_shape: tuple = ()
 
     def __call__(self, xs: jax.Array) -> jax.Array:
         return self.fn(self.params, xs)
@@ -242,6 +251,70 @@ class StreamingExecutor:
     def zero_reads(self) -> dict:
         """A zeros-filled decoded-reads template (for driving stage_fns)."""
         return self._zero_reads()
+
+    def run_traced(self, xs: jax.Array, recorder=NULL_RECORDER, *,
+                   measure_stages: bool = True, repeats: int = 3,
+                   warmup: int = 1) -> tuple[jax.Array, ModelCheck]:
+        """Run the pipeline tick-by-tick, narrating each tick into a trace.
+
+        Same jitted tick body as the fused ``lax.scan`` — the only change
+        is *when* host control returns, so outputs are bit-for-bit ``fn``'s
+        (asserted by the no-op parity test).  Per tick the host records the
+        wall-clock interval, the :class:`~repro.obs.StreamTracer` emits the
+        tick/stage spans and walks the bounded queues, and the spill
+        counters account each crossing's off-chip bytes.  Returns the
+        ``(B, L)`` outputs plus a :class:`~repro.obs.ModelCheck` comparing
+        the walk (and, with ``measure_stages``, per-stage wall clock via
+        :func:`measured_stage_latencies`) against Eq. 5/6 and Eq. 1.
+
+        Instrumentation is host-side only, at tick boundaries: with the
+        default ``NULL_RECORDER`` every hook is a no-op and the jitted
+        computation is untouched.
+        """
+        import time
+
+        if self._tick_fn is None:
+            raise NotImplementedError(
+                f"traced execution requires 'interleave' placement, "
+                f"this executor is {self.placement!r}")
+        if tuple(xs.shape) != self._stream_shape:
+            raise ValueError(
+                f"microbatch stream shape {tuple(xs.shape)} does not match "
+                f"the lowered {self._stream_shape} for {self.graph_name!r}")
+        sched = self.schedule
+        queues = Q.build_queues(self._queue_specs, recorder)
+        tracer = StreamTracer(recorder, sched, queues=queues,
+                              stage_of=self._stage_of,
+                              spill_records=self.report.spills)
+        # compile warmup on a throwaway carry so tick 0's span measures the
+        # tick, not XLA compilation
+        warm = self._tick_fn(self.params, self._carry0(),
+                             jnp.asarray(0, jnp.int32), xs)
+        jax.block_until_ready(warm)
+
+        carry = self._carry0()
+        ys = []
+        for t in range(sched.ticks):
+            ts = recorder.now()
+            t0 = time.perf_counter()
+            carry, y = self._tick_fn(self.params, carry,
+                                     jnp.asarray(t, jnp.int32), xs)
+            jax.block_until_ready(y)
+            jax.block_until_ready(carry)
+            dur = time.perf_counter() - t0
+            ys.append(y)
+            tracer.tick(t, ts=ts, dur=dur)
+        acct = tracer.finish()
+
+        stage_s = None
+        if measure_stages:
+            stage_s = measured_stage_latencies(
+                self, xs[0], repeats=repeats, warmup=warmup)
+        mc = check_stream(self.report, stage_seconds=stage_s,
+                          queue_stats=acct["queues"],
+                          ticks_measured=acct["ticks_run"],
+                          steady_measured=acct["phase_ticks"]["steady"])
+        return jnp.stack(ys)[self.n_stages - 1:], mc
 
 
 def lower_plan_pipelined(g: Graph, plan: ExecutionPlan, *,
@@ -298,37 +371,42 @@ def lower_plan_pipelined(g: Graph, plan: ExecutionPlan, *,
                 for e in crossing}
 
     # -- single-device interleave: lax.scan over the tick axis ---------------
+    # tick_body is shared between the fused scan (build_interleave) and the
+    # per-tick traced loop (StreamingExecutor.run_traced): one definition,
+    # so the traced run cannot drift numerically from the fast path.
+    def make_carry0() -> dict:
+        return {e: jax.tree.map(
+            lambda z, d=delay[e]: jnp.zeros((d,) + z.shape, z.dtype),
+            zeros[e]) for e in crossing}
+
+    def tick_body(params, carry, t, xs):
+        x_t = jax.lax.dynamic_index_in_dim(
+            xs, jnp.clip(t, 0, B - 1), axis=0, keepdims=False)
+        reads = {e: dec[e](jax.tree.map(lambda b: b[-1], carry[e]))
+                 for e in crossing}
+        produced: dict = {}
+        y = jnp.zeros((out_len,), jnp.float32)
+        for j in range(S):
+            prod_j, y_j = stage_fns[j](params,
+                                       x_t if j == 0 else None, reads)
+            for e in crossing:
+                if prod_j[e] is not None:
+                    produced[e] = prod_j[e]
+            if j == S - 1:
+                y = y_j
+        new_carry = {
+            e: jax.tree.map(
+                lambda buf, new: jnp.concatenate(
+                    [new[None], buf[:-1]], axis=0),
+                carry[e], produced[e])
+            for e in crossing}
+        return new_carry, y
+
     def build_interleave():
         def step(params, xs):
             _check_stream_shape(xs)
-
-            def tick(carry, t):
-                x_t = jax.lax.dynamic_index_in_dim(
-                    xs, jnp.clip(t, 0, B - 1), axis=0, keepdims=False)
-                reads = {e: dec[e](jax.tree.map(lambda b: b[-1], carry[e]))
-                         for e in crossing}
-                produced: dict = {}
-                y = jnp.zeros((out_len,), jnp.float32)
-                for j in range(S):
-                    prod_j, y_j = stage_fns[j](params,
-                                               x_t if j == 0 else None, reads)
-                    for e in crossing:
-                        if prod_j[e] is not None:
-                            produced[e] = prod_j[e]
-                    if j == S - 1:
-                        y = y_j
-                new_carry = {
-                    e: jax.tree.map(
-                        lambda buf, new: jnp.concatenate(
-                            [new[None], buf[:-1]], axis=0),
-                        carry[e], produced[e])
-                    for e in crossing}
-                return new_carry, y
-
-            carry0 = {e: jax.tree.map(
-                lambda z, d=delay[e]: jnp.zeros((d,) + z.shape, z.dtype),
-                zeros[e]) for e in crossing}
-            _, ys = jax.lax.scan(tick, carry0, jnp.arange(sched.ticks))
+            _, ys = jax.lax.scan(lambda c, t: tick_body(params, c, t, xs),
+                                 make_carry0(), jnp.arange(sched.ticks))
             return ys[S - 1:]
         return jax.jit(step)
 
@@ -419,7 +497,10 @@ def lower_plan_pipelined(g: Graph, plan: ExecutionPlan, *,
         fn=fn, params=params, report=report, plan=plan, graph_name=g.name,
         n_stages=S, microbatches=B, placement=placement,
         stage_fns=jitted_stage_fns, _zero_reads=zero_reads, _decoders=dec,
-        _crossing=crossing)
+        _crossing=crossing, schedule=sched,
+        _tick_fn=(jax.jit(tick_body) if placement == "interleave" else None),
+        _carry0=make_carry0, _queue_specs=specs, _stage_of=dict(an.stage_of),
+        _stream_shape=(B,) + an.in_shape)
 
 
 def _stage_call(stage_fn, params, x, reads):

@@ -7,9 +7,13 @@ compute on microbatch ``b`` instead of blocking the stage (the
 memory-efficient dataflow queues of Petrica et al.).  Here each cross-stage
 edge of a plan gets a :class:`RingBuffer` whose capacity *in microbatch
 entries* derives from the same ``d_b'`` word budget — never below the two
-DMA FIFOs' double buffer.  The jitted pipeline mirrors these queues as scan
-carries; the Python objects are used by ``schedule.simulate_schedule`` to
-account occupancy and stalls for the :class:`~.pipeline.StreamReport`.
+DMA FIFOs' double buffer, and never below the edge's stage distance: a
+``d``-stage crossing is executed as a depth-``d`` shift register in the
+jitted scan carry, so any smaller ring would mis-model the buffer the
+pipeline actually allocates.  The Python objects are used by
+``schedule.simulate_schedule`` and ``obs.StreamTracer`` to account
+occupancy and stalls, and (given a recorder) emit per-queue occupancy
+counters and stall instants into the trace.
 """
 from __future__ import annotations
 
@@ -19,6 +23,7 @@ import math
 
 from ...core.eviction import DMA_FIFO_DEPTH
 from ...core.graph import Graph
+from ...obs.trace import NULL_RECORDER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,7 +33,8 @@ class QueueSpec:
     ``capacity_words`` is Eq. 1's ``d_b' = 2 * DMA_FIFO_DEPTH`` word budget;
     ``capacity`` is that budget expressed in whole microbatch entries,
     floored at 2 (the two DMA-burst FIFOs always double-buffer one entry in
-    flight while the next is being encoded).
+    flight while the next is being encoded) and at ``delay`` (the executed
+    shift-register depth for the crossing).
     """
     src: str
     dst: str
@@ -51,13 +57,22 @@ class RingBuffer:
     as stalls — the events that would backpressure (resp. starve) a
     hardware pipeline stage.  The push still lands (the accounting model
     must keep the schedule moving), so stall counts are diagnostics, not
-    flow control.
+    flow control; ``high_water`` saturates at ``capacity``, the most the
+    modelled ring can physically hold.
+
+    With a ``recorder``, every push/pop emits a ``queue:{name}:occupancy``
+    counter sample and every stall a ``queue:{name}:push_stall`` /
+    ``:pop_stall`` instant, timestamped by the caller's ``ts`` (the tick
+    boundary) so the trace shows queue pressure against the stage spans.
     """
 
-    def __init__(self, capacity: int) -> None:
+    def __init__(self, capacity: int, *, name: str = "",
+                 recorder=NULL_RECORDER) -> None:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
+        self.name = name
+        self.rec = recorder
         self._q: collections.deque = collections.deque()
         self.high_water = 0
         self.push_stalls = 0
@@ -70,20 +85,35 @@ class RingBuffer:
     def occupancy(self) -> int:
         return len(self._q)
 
-    def push(self, item) -> bool:
+    def _emit(self, ts: float | None, stall: str | None = None) -> None:
+        if not self.rec.enabled:
+            return
+        self.rec.counter(f"queue:{self.name}:occupancy",
+                         min(len(self._q), self.capacity), ts,
+                         track="queues")
+        if stall is not None:
+            self.rec.instant(f"queue:{self.name}:{stall}", ts,
+                             track="queues")
+
+    def push(self, item, ts: float | None = None) -> bool:
         """Append; returns False (and counts a stall) if the ring was full."""
         ok = len(self._q) < self.capacity
         if not ok:
             self.push_stalls += 1
         self._q.append(item)
-        self.high_water = max(self.high_water, len(self._q))
+        self.high_water = max(self.high_water,
+                              min(len(self._q), self.capacity))
+        self._emit(ts, None if ok else "push_stall")
         return ok
 
-    def pop(self):
+    def pop(self, ts: float | None = None):
         if not self._q:
             self.pop_stalls += 1
+            self._emit(ts, "pop_stall")
             return None
-        return self._q.popleft()
+        item = self._q.popleft()
+        self._emit(ts)
+        return item
 
     def stats(self) -> dict:
         return {"capacity": self.capacity, "occupancy": len(self._q),
@@ -106,7 +136,7 @@ def queue_specs(g: Graph, stage_of: dict[str, int],
             continue
         m, c = out_shape[e.src]
         d_b_prime = 2.0 * fifo_depth                      # Eq. 1
-        cap = max(2, math.floor(d_b_prime / max(m * c, 1)))
+        cap = max(2, d, math.floor(d_b_prime / max(m * c, 1)))
         specs[(e.src, e.dst)] = QueueSpec(
             src=e.src, dst=e.dst, words_per_entry=m * c,
             word_bits=e.word_bits, codec=codec_of.get((e.src, e.dst), "none"),
@@ -114,6 +144,7 @@ def queue_specs(g: Graph, stage_of: dict[str, int],
     return specs
 
 
-def build_queues(specs: dict[tuple[str, str], QueueSpec]
-                 ) -> dict[tuple[str, str], RingBuffer]:
-    return {e: RingBuffer(s.capacity) for e, s in specs.items()}
+def build_queues(specs: dict[tuple[str, str], QueueSpec],
+                 recorder=NULL_RECORDER) -> dict[tuple[str, str], RingBuffer]:
+    return {e: RingBuffer(s.capacity, name=f"{s.src}->{s.dst}",
+                          recorder=recorder) for e, s in specs.items()}

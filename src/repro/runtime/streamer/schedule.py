@@ -25,6 +25,8 @@ from typing import Callable, Sequence
 from ...core.graph import Graph
 from ...core.pipeline import initiation_interval
 from ...core.plan import ExecutionPlan
+from ...obs.stream import StreamTracer
+from ...obs.trace import NULL_RECORDER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +66,19 @@ class PipelineSchedule:
         if tick >= self.n_microbatches:
             return "drain"
         return "steady"
+
+    # -- phase tick counts (the Eq. 6 regime is exactly the steady ticks) ----
+    @property
+    def fill_ticks(self) -> int:
+        return min(self.n_stages - 1, self.ticks)
+
+    @property
+    def steady_ticks(self) -> int:
+        return max(0, self.n_microbatches - self.n_stages + 1)
+
+    @property
+    def drain_ticks(self) -> int:
+        return self.ticks - self.fill_ticks - self.steady_ticks
 
     def tasks(self) -> list[StageTask]:
         """All cells in tick order (stage-ascending within a tick)."""
@@ -130,27 +145,30 @@ def eq6_pipeline_time(latencies: Sequence[float]) -> float:
 def simulate_schedule(schedule: PipelineSchedule,
                       queues: dict[tuple[str, str], "RingBuffer"],
                       producer_stage: dict[tuple[str, str], int],
-                      consumer_stage: dict[tuple[str, str], int]) -> dict:
+                      consumer_stage: dict[tuple[str, str], int],
+                      recorder=NULL_RECORDER) -> dict:
     """Walk the schedule through the bounded inter-stage queues.
 
     Producers push one (encoded) microbatch entry per active tick, consumers
-    pop one; the ring buffers record occupancy high-water marks and stall
-    events (push against a full queue / pop from an empty one).  The stats
-    show where Eq. 6's bottleneck sits: a queue that rides its capacity is
-    the spill FIFO that would backpressure the pipeline on hardware.
+    pop one (consumers first: a pop at tick ``t`` reads the entry pushed
+    ``delay`` ticks earlier, so within a tick the two ends of a queue act on
+    different entries — double buffering); the ring buffers record occupancy
+    high-water marks and stall events (push against a full queue / pop from
+    an empty one).  The stats show where Eq. 6's bottleneck sits: a queue
+    that rides its capacity is the spill FIFO that would backpressure the
+    pipeline on hardware.  With a ``recorder``, the walk also emits the full
+    model-time trace (tick/stage spans, queue counters) via
+    :class:`~repro.obs.StreamTracer`.
     """
+    stage_of: dict[str, int] = {}
+    for (u, _w), s in producer_stage.items():
+        stage_of[u] = s
+    for (_u, w), s in consumer_stage.items():
+        stage_of[w] = s
+    tracer = StreamTracer(recorder, schedule, queues=queues,
+                          stage_of=stage_of)
     for t in range(schedule.ticks):
-        # consumers first: a pop at tick t reads the entry pushed
-        # delay = (consumer - producer) ticks earlier, so within a tick the
-        # two ends of a queue act on different entries (double buffering).
-        for e, q in queues.items():
-            b = schedule.microbatch_at(consumer_stage[e], t)
-            if b is not None and t - consumer_stage[e] >= 0:
-                q.pop()
-        for e, q in queues.items():
-            b = schedule.microbatch_at(producer_stage[e], t)
-            if b is not None:
-                q.push(b)
+        tracer.tick(t)
     per_queue = {e: q.stats() for e, q in queues.items()}
     return {
         "ticks": schedule.ticks,

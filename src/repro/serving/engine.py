@@ -25,6 +25,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import queue
+import time
 from typing import Callable
 
 import jax
@@ -34,6 +35,7 @@ import numpy as np
 from repro.core.compression import bfp8_decode, bfp8_encode
 from repro.models import decode_step, forward, init_cache, project_logits
 from repro.models.config import ArchConfig
+from repro.obs.trace import LatencyHistogram
 
 
 @dataclasses.dataclass
@@ -77,6 +79,9 @@ class ServingEngine:
         self.pos = np.zeros(max_batch, np.int32)
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.stats = EngineStats()
+        # submit -> retire wall clock per request (log-bucketed)
+        self.latency = LatencyHistogram()
+        self._submit_ts: dict[int, float] = {}
         self.host_store: dict[int, dict] = {}    # rid -> evicted pages
         # rid -> raw pages still in HBM, in retirement order (FIFO eviction)
         self.resident_store: "collections.OrderedDict[int, dict]" = \
@@ -91,6 +96,7 @@ class ServingEngine:
         r = Request(rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
                     max_new_tokens=max_new_tokens, eos=eos)
         self._next_rid += 1
+        self._submit_ts[r.rid] = time.perf_counter()
         self.queue.put(r)
         return r
 
@@ -120,6 +126,10 @@ class ServingEngine:
 
     def _retire(self, slot: int) -> None:
         r = self.slots[slot]
+        if r is not None:
+            t0 = self._submit_ts.pop(r.rid, None)
+            if t0 is not None:
+                self.latency.record(time.perf_counter() - t0)
         if r is not None and self.evict_to_host:
             pages = self._snapshot_slot(slot)
             if self.resident_limit > 0:
@@ -254,9 +264,13 @@ class GraphStreamServer:
         self.executor = executor
         self.microbatches = executor.microbatches
         self.stats = StreamServerStats()
+        # submit -> flush-delivery wall clock per frame (log-bucketed):
+        # queueing delay + padding bubbles + the stream's pipeline run
+        self.latency = LatencyHistogram()
         self.autotune_result = None          # set by .autotuned()
         self._pending: list[tuple[int, np.ndarray]] = []
         self._results: dict[int, np.ndarray] = {}
+        self._submit_ts: dict[int, float] = {}
         self._next_ticket = 0
 
     @classmethod
@@ -287,6 +301,7 @@ class GraphStreamServer:
         """Queue one (positions, channels) frame; returns a ticket id."""
         self._pending.append((self._next_ticket,
                               np.asarray(frame, np.float32)))
+        self._submit_ts[self._next_ticket] = time.perf_counter()
         self._next_ticket += 1
         self.stats.frames_in += 1
         return self._next_ticket - 1
@@ -305,9 +320,13 @@ class GraphStreamServer:
                 self.stats.padded_frames += pad
             ys = np.asarray(self.executor(jnp.asarray(xs)))
             self.stats.streams_run += 1
+            now = time.perf_counter()
             for (ticket, _), y in zip(chunk, ys):
                 out[ticket] = y
                 self.stats.frames_out += 1
+                t0 = self._submit_ts.pop(ticket, None)
+                if t0 is not None:
+                    self.latency.record(now - t0)
         self._results.update(out)
         return out
 

@@ -231,6 +231,117 @@ def test_plan_unknown_keys_are_collected(n_layers, n_extra):
     assert back.streams == plan.streams
 
 
+# =============================================================================
+# Streaming telemetry invariants (ISSUE 6) — random plans driven purely
+# through the schedule walk: build_schedule + queue_specs/build_queues +
+# StreamTracer, no jit anywhere.
+# =============================================================================
+
+import dataclasses as _dc
+
+
+@_dc.dataclass(frozen=True)
+class _Spill:
+    """Duck-typed SpillRecord: what StreamTracer/emit_spill_counters read."""
+    src: str
+    dst: str
+    codec: str
+    offchip_bits: int
+
+
+def _random_staged_chain(n, n_stages, chans, skip_draws, stage_draws):
+    """A chain with forward skip edges plus a non-decreasing random stage
+    assignment — every edge is same-stage or forward-crossing, like any
+    valid plan the DSE can emit."""
+    g = chain(n, [1000] * n, [10] * n)
+    for i, d in enumerate(skip_draws[: max(0, n - 2)]):
+        if d:                                      # forward skip v_i -> v_j
+            j = i + 2 + d % max(1, n - i - 2)
+            if j < n and not g.g.has_edge(f"v{i}", f"v{j}"):
+                g.connect(f"v{i}", f"v{j}")
+    topo = g.topo()
+    steps = [stage_draws[i % len(stage_draws)] % 2 for i in range(len(topo))]
+    stage, stage_of = 0, {}
+    for name, inc in zip(topo, steps):
+        stage = min(n_stages - 1, stage + inc)
+        stage_of[name] = stage
+    out_shape = {name: (1 + chans[i % len(chans)] % 8,
+                        1 + chans[(i + 1) % len(chans)])
+                 for i, name in enumerate(topo)}
+    return g, stage_of, out_shape
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(1, 8),
+       st.lists(st.integers(0, 5), min_size=4, max_size=4),
+       st.lists(st.integers(0, 63), min_size=4, max_size=4),
+       st.lists(st.integers(0, 99), min_size=6, max_size=6))
+@settings(max_examples=40, deadline=None)
+def test_queue_high_water_bounded_by_eq1_capacity(n, n_stages, B, skips,
+                                                  chans, stages):
+    """Eq. 1 queue sizing holds on random plans: walking the full 1F1B
+    schedule through the bounded rings never exceeds any ring's capacity,
+    never stalls, and drains every ring completely."""
+    from repro.obs import StreamTracer
+    from repro.runtime.streamer import (build_queues, build_schedule,
+                                        queue_specs)
+
+    g, stage_of, out_shape = _random_staged_chain(n, n_stages, chans,
+                                                  skips, stages)
+    specs = queue_specs(g, stage_of, out_shape)
+    queues = build_queues(specs)
+    sched = build_schedule(max(stage_of.values()) + 1, B)
+    acct = StreamTracer(schedule=sched, queues=queues,
+                        stage_of=stage_of).run_model()
+    assert acct["ticks_run"] == sched.ticks
+    for e, s in specs.items():
+        st_ = acct["queues"][f"{e[0]}->{e[1]}"]
+        assert st_["high_water"] <= s.capacity      # the Eq. 1 bound
+        assert st_["high_water"] == min(B, s.delay)  # shift-register depth
+        assert st_["push_stalls"] == 0 and st_["pop_stalls"] == 0
+        assert st_["occupancy"] == 0                # fully drained
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(1, 8),
+       st.lists(st.integers(0, 5), min_size=4, max_size=4),
+       st.lists(st.integers(0, 63), min_size=4, max_size=4),
+       st.lists(st.integers(0, 99), min_size=6, max_size=6),
+       st.lists(st.integers(1, 10_000), min_size=5, max_size=5),
+       st.lists(st.integers(0, 1), min_size=5, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_spill_bytes_conserved_on_random_plans(n, n_stages, B, skips, chans,
+                                               stages, sizes, codecs):
+    """Every byte evicted off-chip is restored: over any complete 1F1B
+    run, ``bytes_evicted == bytes_restored`` per spilled edge (and BFP8
+    encode count == decode count) — each endpoint stage is active for
+    exactly ``B`` ticks, regardless of plan shape."""
+    from repro.obs import StreamTracer, TraceRecorder
+    from repro.runtime.streamer import build_schedule
+
+    g, stage_of, _ = _random_staged_chain(n, n_stages, chans, skips, stages)
+    names = list(stage_of)
+    records = []
+    for i, (bits, is_bfp8) in enumerate(zip(sizes, codecs)):
+        src = names[i % len(names)]
+        dst = names[(i * 3 + 1) % len(names)]
+        records.append(_Spill(src=src, dst=dst,
+                              codec="bfp8" if is_bfp8 else "none",
+                              offchip_bits=8 * bits))
+    rec = TraceRecorder(clock=lambda: 0.0)
+    sched = build_schedule(max(stage_of.values()) + 1, B)
+    StreamTracer(rec, sched, stage_of=stage_of,
+                 spill_records=records).run_model()
+    per_edge_bytes = {}
+    for r in records:
+        per_edge_bytes.setdefault(f"{r.src}->{r.dst}", 0)
+        per_edge_bytes[f"{r.src}->{r.dst}"] += B * (r.offchip_bits // 8)
+    for edge, want in per_edge_bytes.items():
+        assert rec.totals[f"spill:{edge}:bytes_evicted"] == want
+        assert rec.totals[f"spill:{edge}:bytes_restored"] == want
+    for k, v in rec.totals.items():
+        if k.startswith("bfp8:") and k.endswith(":encodes"):
+            assert v == rec.totals[k.replace(":encodes", ":decodes")]
+
+
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
 @settings(max_examples=15, deadline=None)
 def test_buffer_depths_nonnegative_any_dag(seed, width):
