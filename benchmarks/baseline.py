@@ -1,0 +1,145 @@
+"""Bench baseline gate: write / compare ``BENCH_*.json`` with tolerances.
+
+The e2e benchmark (``benchmarks/e2e_executor.py``) emits one row per
+(executor, model, codecs, plan) point.  This module turns those rows into
+a committed **baseline artifact** and a CI **regression gate**:
+
+    python -m benchmarks.run --smoke --pipelined --baseline BENCH_smoke.json
+    python -m benchmarks.run --smoke --pipelined --check-baseline BENCH_smoke.json
+
+``--baseline`` snapshots the current rows (stamped with git SHA +
+timestamp, so trajectory entries are attributable); ``--check-baseline``
+re-runs the bench and compares row-by-row under per-metric tolerances,
+exiting non-zero on any violation — that is what makes a silent
+throughput regression fail CI.
+
+Tolerance policy (``TOLERANCES``): deterministic plan metrics
+(``n_stages``, ``evicted``, ``fragged``, ``microbatches``) must match
+exactly and ``offchip_kbits`` within 1% — those only move when the code
+changes what the toolflow *decides*, which is exactly what the gate
+should catch.  Hardware-dependent metrics are gated loosely:
+``fps_executed`` fails only when it drops below ``1 - rel_drop`` of the
+baseline (CI runners are shared and noisy; a 2x collapse is a real
+regression, 20% jitter is not), and ``rel_err`` may not grow past double
+the baseline plus a small absolute floor.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import time
+
+BASELINE_KIND = "smof-bench-baseline"
+BASELINE_SCHEMA_VERSION = 1
+
+# metric -> rule; exactly one of:
+#   {"exact": True}                       value must match the baseline
+#   {"rel": r}                            |measured - base| <= r * |base|
+#   {"rel_drop": r}                       measured >= (1 - r) * base
+#                                         (one-sided: only drops fail)
+#   {"max_growth": g, "abs_floor": a}     measured <= base * g + a
+TOLERANCES: dict[str, dict] = {
+    "n_stages": {"exact": True},
+    "microbatches": {"exact": True},
+    "evicted": {"exact": True},
+    "fragged": {"exact": True},
+    "offchip_kbits": {"rel": 0.01},
+    "fps_executed": {"rel_drop": 0.60},
+    "fps_eq5": {"rel_drop": 0.60},
+    "fps_eq6": {"rel_drop": 0.60},
+    "rel_err": {"max_growth": 2.0, "abs_floor": 1e-4},
+}
+
+
+def row_key(row: dict) -> str:
+    """Stable identity of one bench point across runs."""
+    return (f"{row['executor']}/{row['model']}/{row['codecs']}"
+            f"/s{row['n_stages']}")
+
+
+def git_sha(default: str = "unknown") -> str:
+    """The repo's HEAD SHA, or ``default`` outside a git checkout."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else default
+    except OSError:
+        return default
+
+
+def write_baseline(rows: list[dict], path, *, note: str = "") -> pathlib.Path:
+    """Snapshot bench rows as a committed baseline artifact."""
+    path = pathlib.Path(path)
+    payload = {
+        "kind": BASELINE_KIND,
+        "schema_version": BASELINE_SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "generated_unix": time.time(),
+        "note": note,
+        "tolerances": TOLERANCES,
+        "rows": {row_key(r): r for r in rows},
+    }
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    return path
+
+
+def _check_metric(metric: str, measured, base, rule: dict) -> str | None:
+    """One metric under one rule; returns a failure message or ``None``."""
+    if rule.get("exact"):
+        if measured != base:
+            return f"{metric}: {measured!r} != baseline {base!r} (exact)"
+        return None
+    measured, base = float(measured), float(base)
+    if "rel" in rule:
+        if abs(measured - base) > rule["rel"] * abs(base):
+            return (f"{metric}: {measured:.6g} deviates from baseline "
+                    f"{base:.6g} by more than {rule['rel']:.0%}")
+    if "rel_drop" in rule:
+        floor = (1.0 - rule["rel_drop"]) * base
+        if measured < floor:
+            return (f"{metric}: {measured:.6g} dropped below "
+                    f"{floor:.6g} ({1 - rule['rel_drop']:.0%} of baseline "
+                    f"{base:.6g})")
+    if "max_growth" in rule:
+        ceil = base * rule["max_growth"] + rule.get("abs_floor", 0.0)
+        if measured > ceil:
+            return (f"{metric}: {measured:.6g} grew past {ceil:.6g} "
+                    f"(baseline {base:.6g})")
+    return None
+
+
+def check_baseline(rows: list[dict], path) -> tuple[list[str], list[str]]:
+    """Compare bench rows against a baseline artifact.
+
+    Returns ``(failures, notes)``: ``failures`` is empty iff the run is
+    within tolerance of the baseline (missing rows are failures — a bench
+    point silently disappearing is a regression too; *new* rows are
+    reported as notes, they gate nothing until committed).
+    """
+    d = json.loads(pathlib.Path(path).read_text())
+    if d.get("kind") != BASELINE_KIND:
+        raise ValueError(f"{path}: not a {BASELINE_KIND} artifact")
+    base_rows: dict[str, dict] = d["rows"]
+    tolerances = {**TOLERANCES, **d.get("tolerances", {})}
+    measured = {row_key(r): r for r in rows}
+
+    failures: list[str] = []
+    notes: list[str] = [f"baseline {path} @ {d.get('git_sha', 'unknown')}"]
+    for key, base in sorted(base_rows.items()):
+        got = measured.get(key)
+        if got is None:
+            failures.append(f"{key}: present in baseline but not measured")
+            continue
+        for metric, rule in tolerances.items():
+            if metric not in base or metric not in got:
+                continue
+            msg = _check_metric(metric, got[metric], base[metric], rule)
+            if msg is not None:
+                failures.append(f"{key}: {msg}")
+        notes.append(f"{key}: fps_executed {got.get('fps_executed', 0):.4g} "
+                     f"vs baseline {base.get('fps_executed', 0):.4g}")
+    for key in sorted(set(measured) - set(base_rows)):
+        notes.append(f"{key}: new row (not in baseline, not gated)")
+    return failures, notes

@@ -29,6 +29,14 @@ Modes:
                                         # + the closed-loop autotuner's
                                         # candidate trajectory (autotune/...
                                         # rows, schema in e2e_executor.py)
+    python -m benchmarks.run --smoke --pipelined --baseline BENCH_smoke.json
+                                        # snapshot e2e rows as a committed
+                                        # baseline (git SHA + timestamp)
+    python -m benchmarks.run --smoke --pipelined \
+                             --check-baseline BENCH_smoke.json
+                                        # regression gate: exits 1 if any
+                                        # row breaks the per-metric
+                                        # tolerances (benchmarks/baseline.py)
 
 The roofline section reads the dry-run artifacts in results/dryrun (run
 ``python -m repro.launch.dryrun --all`` first; checked-in results are used
@@ -58,15 +66,36 @@ def main(argv: list[str] | None = None) -> None:
                          "section (candidate-trajectory rows)")
     ap.add_argument("--autotune-json", default=None, metavar="PATH",
                     help="write the autotune trajectory as a JSON artifact")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="write the e2e rows as a baseline artifact "
+                         "(BENCH_*.json, stamped with git SHA + timestamp)")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="compare the e2e rows against a committed baseline "
+                         "under per-metric tolerances; exit 1 on regression")
     args = ap.parse_args(argv)
     smoke = args.smoke
-    from . import (e2e_executor, fig6_ablation, fig7_compression,
+    from . import (baseline, e2e_executor, fig6_ablation, fig7_compression,
                    fig8_variability, kernels_bench, roofline, table3_models,
                    table4_partitioning, table5_throughput)
     print("name,us_per_call,derived")
     table3_models.run()
-    e2e_executor.run(smoke=smoke, pipelined=args.pipelined,
-                     microbatches=args.microbatches, json_path=args.e2e_json)
+    e2e_rows = e2e_executor.run(smoke=smoke, pipelined=args.pipelined,
+                                microbatches=args.microbatches,
+                                json_path=args.e2e_json)
+    if args.baseline:
+        p = baseline.write_baseline(e2e_rows, args.baseline,
+                                    note="smoke" if smoke else "full")
+        print(f"baseline: wrote {len(e2e_rows)} rows -> {p}", file=sys.stderr)
+    if args.check_baseline:
+        failures, notes = baseline.check_baseline(e2e_rows,
+                                                  args.check_baseline)
+        for line in notes:
+            print(f"baseline: {line}", file=sys.stderr)
+        if failures:
+            for line in failures:
+                print(f"baseline REGRESSION: {line}", file=sys.stderr)
+            raise SystemExit(1)
+        print("baseline: all rows within tolerance", file=sys.stderr)
     if args.autotune:
         e2e_executor.run_autotune(smoke=smoke,
                                   microbatches=args.microbatches,

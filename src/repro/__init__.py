@@ -19,7 +19,9 @@ _API_NAMES = ("CompileSpec", "Compiled", "compile", "build_plan",
 
 # telemetry surface (repro.obs), same lazy resolution
 _OBS_NAMES = ("ObsConfig", "TraceRecorder", "NullRecorder", "ModelCheck",
-              "LatencyHistogram", "validate_chrome_trace")
+              "LatencyHistogram", "validate_chrome_trace",
+              "MetricsRegistry", "parse_metrics_text",
+              "SloConfig", "SloEvaluator", "FlightRecorder")
 
 __all__ = list(_API_NAMES) + list(_OBS_NAMES)
 

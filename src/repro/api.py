@@ -56,6 +56,7 @@ from .core.dse import DSEConfig, run_dse
 from .core.graph import Graph
 from .core.plan import ExecutionPlan, PLAN_SCHEMA_VERSION, plan_from_dse
 from .core.resources import ALL_DEVICES, Device, get_device
+from .obs.metrics import MetricsRegistry
 from .obs.trace import NULL_RECORDER, ObsConfig, TraceRecorder
 
 MODES = ("reference", "staged", "pipelined")
@@ -139,7 +140,8 @@ def _autotune_digest(result) -> str:
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
-def build_plan(spec: CompileSpec, graph: Graph | None = None
+def build_plan(spec: CompileSpec, graph: Graph | None = None, *,
+               metrics: MetricsRegistry | None = None
                ) -> tuple[ExecutionPlan | None, Any]:
     """Resolve the spec's decision vector: ``(plan, autotune_result)``.
 
@@ -168,7 +170,7 @@ def build_plan(spec: CompileSpec, graph: Graph | None = None
             kernel_mode=spec.resolved_kernel_mode(), seed=spec.seed)
         rec = TraceRecorder() if spec.obs.enabled else NULL_RECORDER
         autotune_result = autotune(g, _resolve_device(spec), cfg,
-                                   recorder=rec)
+                                   recorder=rec, metrics=metrics)
         plan = autotune_result.best_plan
     else:                                     # "dse": Algorithm 1
         dev = _resolve_device(spec)
@@ -209,7 +211,10 @@ def compile(spec: CompileSpec) -> "Compiled":
     """
     spec.validate()
     g = _resolve_graph(spec)
-    plan, autotune_result = build_plan(spec, g)
+    # one registry per artifact: the autotune search, traced runs and any
+    # server built from this compile all land on the same scrape surface
+    registry = MetricsRegistry()
+    plan, autotune_result = build_plan(spec, g, metrics=registry)
     km = spec.resolved_kernel_mode()
 
     if spec.mode == "reference":
@@ -230,7 +235,7 @@ def compile(spec: CompileSpec) -> "Compiled":
 
     return Compiled(spec=spec, graph=g, device=_device_name(spec, plan),
                     plan=plan, executor=executor,
-                    autotune_result=autotune_result)
+                    autotune_result=autotune_result, registry=registry)
 
 
 @dataclasses.dataclass
@@ -253,6 +258,9 @@ class Compiled:
     autotune_result: Any = None      # optim.autotune.AutotuneResult
     model_check: Any = None          # obs.ModelCheck, set by trace()
     recorder: Any = None             # obs.TraceRecorder, set by trace()
+    # one scrape surface per artifact: trace() and serve() both feed it
+    registry: MetricsRegistry = dataclasses.field(
+        default_factory=MetricsRegistry)
 
     @property
     def model(self) -> str:
@@ -313,6 +321,21 @@ class Compiled:
             out["model_check"] = self.model_check.summary()
         return out
 
+    def metrics(self) -> dict:
+        """The artifact's metrics snapshot (``{sample_key: value}``).
+
+        Every traced run (:meth:`trace`) and every server built by
+        :meth:`serve` feeds the artifact's one
+        :class:`~repro.obs.metrics.MetricsRegistry`, so this is the whole
+        design's scrape surface; :meth:`metrics_text` is the Prometheus
+        exposition of the same registry.
+        """
+        return self.registry.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of :meth:`metrics`."""
+        return self.registry.metrics_text()
+
     # -- tracing --------------------------------------------------------------
     def trace(self, x=None, *, path=None, recorder=None):
         """Execute once with telemetry on; returns ``(outputs, ModelCheck)``.
@@ -328,11 +351,23 @@ class Compiled:
         ``x=None`` synthesizes a seeded input stream; ``path`` (default:
         ``spec.obs.trace_path``) writes the Chrome trace-event JSON —
         open it in Perfetto / ``chrome://tracing``.
+
+        With ``spec.obs.flight_capacity > 0`` the default recorder is a
+        bounded :class:`~repro.obs.flight.FlightRecorder` ring instead,
+        which auto-dumps to ``spec.obs.flight_path`` if the run's
+        ModelCheck comes back violated.
         """
         import jax.numpy as jnp
         import numpy as np
 
-        rec = recorder if recorder is not None else TraceRecorder()
+        if recorder is not None:
+            rec = recorder
+        elif self.spec.obs.flight_capacity > 0:
+            from .obs.flight import FlightRecorder
+            rec = FlightRecorder(self.spec.obs.flight_capacity,
+                                 path=self.spec.obs.flight_path)
+        else:
+            rec = TraceRecorder()
         m, c = self.input_shape()
         if x is None:
             rng = np.random.default_rng(self.spec.seed)
@@ -344,11 +379,14 @@ class Compiled:
             if x.ndim == 2:
                 B = self.executor.microbatches
                 x = jnp.broadcast_to(x, (B,) + x.shape)
-            y, mc = self.executor.run_traced(x, rec)
+            y, mc = self.executor.run_traced(x, rec, metrics=self.registry)
         else:
             y = self.executor.run_traced(x, rec)
         self.model_check = mc
         self.recorder = rec
+        if (mc is not None and getattr(rec, "path", None) is not None
+                and hasattr(rec, "on_model_check")):
+            rec.on_model_check(mc)       # flight ring: dump on violation
         path = path if path is not None else self.spec.obs.trace_path
         if path is not None and rec.enabled:
             rec.save(path)
@@ -363,7 +401,16 @@ class Compiled:
         plan pipelined with ``kw`` applied as :class:`CompileSpec`
         overrides (e.g. ``microbatches=16``).  Unless overridden, the
         stream depth follows the current executor's (so an autotuned
-        artifact keeps serving at the depth the search measured at)."""
+        artifact keeps serving at the depth the search measured at).
+
+        The server shares this artifact's metrics registry (one scrape
+        surface, read via :meth:`metrics` / ``server.metrics_text()``).
+        When ``spec.obs.slo`` is set, a rolling-window
+        :class:`~repro.obs.slo.SloEvaluator` is attached — roofline from
+        the plan's calibrated provenance, spill bandwidth budget from the
+        device sheet — and, with ``spec.obs.flight_capacity > 0``, an SLO
+        breach dumps a :class:`~repro.obs.flight.FlightRecorder` ring to
+        ``spec.obs.flight_path``."""
         from .serving.engine import GraphStreamServer
         if self.mode != "pipelined" and self.plan is None:
             raise ValueError(
@@ -379,8 +426,21 @@ class Compiled:
             sx = compile(dataclasses.replace(
                 self.spec, mode="pipelined", strategy="manual-plan",
                 plan=self.plan, **kw)).executor
-        srv = GraphStreamServer(executor=sx)
+        srv = GraphStreamServer(executor=sx, metrics=self.registry)
         srv.autotune_result = self.autotune_result
+        if self.spec.obs.slo is not None:
+            try:
+                bw = _resolve_device(self.spec).offchip_gbps
+            except (KeyError, ValueError):
+                bw = None
+            evaluator = srv.enable_slo(self.spec.obs.slo, bw_gbps=bw)
+            if (self.spec.obs.flight_capacity > 0
+                    and self.spec.obs.flight_path is not None):
+                from .obs.flight import FlightRecorder
+                flight = FlightRecorder(self.spec.obs.flight_capacity,
+                                        path=self.spec.obs.flight_path)
+                evaluator.on_breach.append(flight.on_slo_report)
+                srv.flight = flight
         return srv
 
     # -- persistence ----------------------------------------------------------

@@ -45,21 +45,32 @@ class ObsConfig:
 
     ``enabled`` turns host-side tracing on (``Compiled.trace`` and the
     autotune loop allocate a :class:`TraceRecorder`); ``trace_path`` is
-    where the Chrome trace JSON lands when set.  The config round-trips
+    where the Chrome trace JSON lands when set.  ``slo`` carries the
+    :class:`~repro.obs.slo.SloConfig` targets the serving layer scores
+    against; ``flight_capacity`` > 0 makes ``Compiled.trace`` record into
+    a bounded :class:`~repro.obs.flight.FlightRecorder` ring that dumps
+    to ``flight_path`` on a ModelCheck violation.  The config round-trips
     through ``Compiled.save``/``load`` (see ``to_dict``/``from_dict``).
     """
     enabled: bool = False
     trace_path: str | None = None
+    slo: Any = None                   # repro.obs.slo.SloConfig | None
+    flight_capacity: int = 0          # > 0 enables the flight recorder
+    flight_path: str | None = None
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        return dataclasses.asdict(self)  # SloConfig nests as a plain dict
 
     @classmethod
     def from_dict(cls, d: dict) -> "ObsConfig":
         # forward-compat: a newer writer's extra keys are ignored, same
         # policy as ExecutionPlan.from_json
         known = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: v for k, v in d.items() if k in known})
+        kw = {k: v for k, v in d.items() if k in known}
+        if isinstance(kw.get("slo"), dict):
+            from .slo import SloConfig
+            kw["slo"] = SloConfig.from_dict(kw["slo"])
+        return cls(**kw)
 
 
 class NullRecorder:
@@ -303,7 +314,9 @@ class LatencyHistogram:
 
     Buckets double from ``base`` seconds (default 1 µs); everything above
     the last edge lands in the overflow bucket.  Quantiles are read from
-    the bucket upper edges, so they are conservative (<= one bucket off).
+    the bucket upper edges, so they are conservative (<= one bucket off),
+    then clamped into ``[min_s, max_s]`` so an estimate never lies
+    outside the recorded range.
     """
 
     def __init__(self, base: float = 1e-6, n_buckets: int = 32) -> None:
@@ -311,10 +324,12 @@ class LatencyHistogram:
         self.counts = [0] * (n_buckets + 1)
         self.n = 0
         self.total_s = 0.0
+        self.min_s = 0.0
         self.max_s = 0.0
 
     def record(self, seconds: float) -> None:
         self.counts[bisect.bisect_left(self.edges, seconds)] += 1
+        self.min_s = seconds if not self.n else min(self.min_s, seconds)
         self.n += 1
         self.total_s += seconds
         self.max_s = max(self.max_s, seconds)
@@ -328,7 +343,8 @@ class LatencyHistogram:
         for i, c in enumerate(self.counts):
             seen += c
             if seen >= need and c:
-                return self.edges[i] if i < len(self.edges) else self.max_s
+                edge = self.edges[i] if i < len(self.edges) else self.max_s
+                return min(max(edge, self.min_s), self.max_s)
         return self.max_s
 
     def summary(self) -> dict:
@@ -337,5 +353,7 @@ class LatencyHistogram:
             "mean_s": self.total_s / self.n if self.n else 0.0,
             "p50_s": self.quantile(0.50),
             "p95_s": self.quantile(0.95),
+            "p99_s": self.quantile(0.99),
+            "min_s": self.min_s,
             "max_s": self.max_s,
         }

@@ -314,7 +314,7 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
              | None = None,
              measure_stages: Callable[[StreamingExecutor, jax.Array],
                                       list[float]] | None = None,
-             recorder=NULL_RECORDER) -> AutotuneResult:
+             recorder=NULL_RECORDER, metrics=None) -> AutotuneResult:
     """Measured-in-the-loop plan search over executable graph ``g``.
 
     The seed candidate is the default DSE plan (``run_dse`` under
@@ -326,10 +326,26 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
 
     ``recorder`` (an ``obs`` recorder) narrates the search: one span per
     candidate on the ``autotune`` track, carrying the move, acceptance,
-    measured fps and the bottleneck-stage attribution.
+    measured fps and the bottleneck-stage attribution.  ``metrics`` (a
+    :class:`~repro.obs.metrics.MetricsRegistry`) keeps live per-candidate
+    accounting: ``smof_autotune_candidates_total`` by acceptance plus
+    baseline/best-fps and calibration gauges.
     """
     cfg = cfg or AutotuneConfig()
     rng = random.Random(cfg.seed)
+    m_cand = m_best = m_baseline = m_spc = None
+    if metrics is not None:
+        m_cand = metrics.counter(
+            "smof_autotune_candidates_total",
+            "evaluated SA candidates, by acceptance", ("accepted",))
+        m_best = metrics.gauge(
+            "smof_autotune_best_fps", "best measured pipelined fps so far")
+        m_baseline = metrics.gauge(
+            "smof_autotune_baseline_fps",
+            "measured fps of the seed (default DSE) plan")
+        m_spc = metrics.gauge(
+            "smof_autotune_s_per_cycle",
+            "calibrated seconds per model cycle (through-origin fit)")
     measure_fps = measure_fps or (
         lambda sx, xs: measure_pipelined_fps(sx, xs, repeats=cfg.repeats,
                                              warmup=cfg.warmup))
@@ -391,6 +407,10 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
     trajectory.append(rec)
     baseline_fps = cur_fps = best_fps = rec.fps_measured
     best_plan, best_rec = plan, rec
+    if m_cand is not None:
+        m_cand.labels(accepted="true").inc()
+        m_baseline.set(baseline_fps)
+        m_best.set(best_fps)
 
     temp = cfg.init_temperature
     for i in range(1, cfg.n_candidates):
@@ -410,9 +430,13 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
                              track="autotune",
                              args={"candidate": i,
                                    "fps_measured": rec.fps_measured})
+        if m_cand is not None:
+            m_cand.labels(accepted="true" if accept else "false").inc()
         if rec.fps_measured > best_fps:
             best_fps, best_plan, best_rec = rec.fps_measured, plan, rec
             rec.best_so_far = True
+            if m_best is not None:
+                m_best.set(best_fps)
         trajectory.append(rec)
         temp *= cfg.cooling
 
@@ -423,6 +447,8 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
            if r.eq6_cycles > 0 and r.fps_measured > 0]
     denom = sum(a * a for a, _ in pts)
     s_per_cycle = (sum(a * m for a, m in pts) / denom) if denom else 0.0
+    if m_spc is not None:
+        m_spc.set(s_per_cycle)
     nominal = 1.0 / (dev.freq_mhz * 1e6)
     for r in trajectory:
         r.fps_eq6_pre = 1.0 / (r.eq6_cycles * nominal)

@@ -46,17 +46,39 @@ class StepRecord:
 
 
 class FaultTolerantLoop:
-    """Wraps (state, batch) -> state step functions with FT policies."""
+    """Wraps (state, batch) -> state step functions with FT policies.
+
+    With a ``metrics`` :class:`~repro.obs.metrics.MetricsRegistry`, every
+    recovery event also lands in ``smof_fault_events_total{kind=...}``
+    (retry / restore / rollback / checkpoint / straggler) and step wall
+    times in ``smof_fault_step_seconds`` — so recovery behaviour is
+    visible on the same scrape surface as the serving metrics, not only
+    in the in-memory ``events`` list.
+    """
 
     def __init__(self, step_fn: Callable[[Any, Any], Any],
                  store: CheckpointStore, cfg: FaultConfig | None = None,
-                 fault_injector: Callable[[int], None] | None = None):
+                 fault_injector: Callable[[int], None] | None = None,
+                 metrics=None):
         self.step_fn = step_fn
         self.store = store
         self.cfg = cfg or FaultConfig()
         self.fault_injector = fault_injector
         self.records: list[StepRecord] = []
         self.events: list[dict] = []
+        self.metrics = metrics
+        self._c_events = self._h_step = None
+        if metrics is not None:
+            self._c_events = metrics.counter(
+                "smof_fault_events_total",
+                "fault-tolerance events, by kind", ("kind",))
+            self._h_step = metrics.histogram(
+                "smof_fault_step_seconds", "per-step wall clock")
+
+    def _event(self, kind: str, **payload) -> None:
+        self.events.append({"kind": kind, **payload})
+        if self._c_events is not None:
+            self._c_events.labels(kind=kind).inc()
 
     # -- recovery ---------------------------------------------------------------
     def try_restore(self, template: Any, shardings: Any = None
@@ -66,7 +88,7 @@ class FaultTolerantLoop:
         if step is None:
             return template, 0
         state, extra = self.store.restore(template, step, shardings=shardings)
-        self.events.append({"kind": "restore", "step": step})
+        self._event("restore", step=step)
         return state, int(extra.get("next_step", step + 1))
 
     # -- main loop ----------------------------------------------------------------
@@ -87,8 +109,8 @@ class FaultTolerantLoop:
                     break
                 except Exception as e:  # noqa: BLE001 — injected/transient
                     retries += 1
-                    self.events.append({"kind": "retry", "step": step,
-                                        "error": str(e), "attempt": retries})
+                    self._event("retry", step=step, error=str(e),
+                                attempt=retries)
                     if retries > self.cfg.max_retries:
                         state, step = self._recover(state)
                         batch = batches(step)
@@ -97,15 +119,17 @@ class FaultTolerantLoop:
             is_straggler = (len(wall) >= 5
                             and dt > self.cfg.straggler_factor * median(wall))
             if is_straggler:
-                self.events.append({"kind": "straggler", "step": step,
-                                    "wall_s": dt, "median_s": median(wall)})
+                self._event("straggler", step=step, wall_s=dt,
+                            median_s=median(wall))
             wall.append(dt)
+            if self._h_step is not None:
+                self._h_step.observe(dt)
             self.records.append(StepRecord(step, dt, retries, is_straggler))
             state = new_state
             step += 1
             if step % self.cfg.checkpoint_every == 0:
                 self.store.save_async(step, state, {"next_step": step})
-                self.events.append({"kind": "checkpoint", "step": step})
+                self._event("checkpoint", step=step)
         self.store.wait()
         return state
 
@@ -113,11 +137,11 @@ class FaultTolerantLoop:
         """Exhausted retries: roll back to the newest checkpoint."""
         latest = self.store.latest_step()
         if latest is None:
-            self.events.append({"kind": "recover_failed_no_ckpt"})
+            self._event("recover_failed_no_ckpt")
             raise RuntimeError("step keeps failing and no checkpoint exists")
         restored, extra = self.store.restore(state, latest)
         nxt = int(extra.get("next_step", latest + 1))
-        self.events.append({"kind": "rollback", "to_step": nxt})
+        self._event("rollback", to_step=nxt)
         return restored, nxt
 
 

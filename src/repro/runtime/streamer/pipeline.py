@@ -254,7 +254,8 @@ class StreamingExecutor:
 
     def run_traced(self, xs: jax.Array, recorder=NULL_RECORDER, *,
                    measure_stages: bool = True, repeats: int = 3,
-                   warmup: int = 1) -> tuple[jax.Array, ModelCheck]:
+                   warmup: int = 1,
+                   metrics=None) -> tuple[jax.Array, ModelCheck]:
         """Run the pipeline tick-by-tick, narrating each tick into a trace.
 
         Same jitted tick body as the fused ``lax.scan`` — the only change
@@ -269,7 +270,11 @@ class StreamingExecutor:
 
         Instrumentation is host-side only, at tick boundaries: with the
         default ``NULL_RECORDER`` every hook is a no-op and the jitted
-        computation is untouched.
+        computation is untouched.  With a ``metrics``
+        :class:`~repro.obs.metrics.MetricsRegistry`, the run additionally
+        feeds the scrape surface: per-phase ``smof_stream_ticks_total``,
+        ``smof_stream_frames_total``, per-edge queue occupancy/stall
+        metrics (via the rings) and ``smof_spill_bytes_total``.
         """
         import time
 
@@ -282,7 +287,7 @@ class StreamingExecutor:
                 f"microbatch stream shape {tuple(xs.shape)} does not match "
                 f"the lowered {self._stream_shape} for {self.graph_name!r}")
         sched = self.schedule
-        queues = Q.build_queues(self._queue_specs, recorder)
+        queues = Q.build_queues(self._queue_specs, recorder, metrics)
         tracer = StreamTracer(recorder, sched, queues=queues,
                               stage_of=self._stage_of,
                               spill_records=self.report.spills)
@@ -305,6 +310,8 @@ class StreamingExecutor:
             ys.append(y)
             tracer.tick(t, ts=ts, dur=dur)
         acct = tracer.finish()
+        if metrics is not None:
+            self._record_metrics(metrics, acct)
 
         stage_s = None
         if measure_stages:
@@ -315,6 +322,36 @@ class StreamingExecutor:
                           ticks_measured=acct["ticks_run"],
                           steady_measured=acct["phase_ticks"]["steady"])
         return jnp.stack(ys)[self.n_stages - 1:], mc
+
+    def _record_metrics(self, metrics, acct: dict) -> None:
+        """Feed one traced run's accounting into a MetricsRegistry.
+
+        Queue occupancy/stall metrics update live inside the rings (they
+        were built with the registry); what is left to record at run end
+        are tick counts and the per-edge off-chip spill volume — each
+        spill record moves ``offchip_bits`` once per microbatch, the same
+        totals ``StreamTracer`` accumulates on the recorder.
+        """
+        ticks = metrics.counter(
+            "smof_stream_ticks_total",
+            "pipeline ticks walked, by 1F1B phase", ("phase",))
+        for phase, n in acct["phase_ticks"].items():
+            if n:
+                ticks.labels(phase=phase).inc(n)
+        metrics.counter(
+            "smof_stream_frames_total",
+            "microbatch frames retired by the pipelined streamer",
+        ).inc(self.microbatches)
+        spill = metrics.counter(
+            "smof_spill_bytes_total",
+            "off-chip spill traffic in bytes, by edge and direction",
+            ("edge", "direction"))
+        for r in self.report.spills:
+            nbytes = (r.offchip_bits // 8) * self.microbatches
+            if nbytes:
+                edge = f"{r.src}->{r.dst}"
+                spill.labels(edge=edge, direction="evict").inc(nbytes)
+                spill.labels(edge=edge, direction="restore").inc(nbytes)
 
 
 def lower_plan_pipelined(g: Graph, plan: ExecutionPlan, *,

@@ -64,10 +64,14 @@ class RingBuffer:
     counter sample and every stall a ``queue:{name}:push_stall`` /
     ``:pop_stall`` instant, timestamped by the caller's ``ts`` (the tick
     boundary) so the trace shows queue pressure against the stage spans.
+    With a ``metrics`` registry, the same events additionally keep the
+    per-edge ``smof_queue_occupancy`` gauge and
+    ``smof_queue_{push,pop}_stalls_total`` counters current (the scrape
+    view of the Eq. 1 invariant: stall totals should stay 0).
     """
 
     def __init__(self, capacity: int, *, name: str = "",
-                 recorder=NULL_RECORDER) -> None:
+                 recorder=NULL_RECORDER, metrics=None) -> None:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
@@ -77,6 +81,21 @@ class RingBuffer:
         self.high_water = 0
         self.push_stalls = 0
         self.pop_stalls = 0
+        self._m_occ = self._m_push = self._m_pop = None
+        if metrics is not None:
+            edge = name or "?"
+            self._m_occ = metrics.gauge(
+                "smof_queue_occupancy",
+                "inter-stage ring occupancy (entries, Eq. 1-capped)",
+                ("edge",)).labels(edge=edge)
+            self._m_push = metrics.counter(
+                "smof_queue_push_stalls_total",
+                "pushes against a full inter-stage ring",
+                ("edge",)).labels(edge=edge)
+            self._m_pop = metrics.counter(
+                "smof_queue_pop_stalls_total",
+                "pops from an empty inter-stage ring",
+                ("edge",)).labels(edge=edge)
 
     def __len__(self) -> int:
         return len(self._q)
@@ -86,6 +105,12 @@ class RingBuffer:
         return len(self._q)
 
     def _emit(self, ts: float | None, stall: str | None = None) -> None:
+        if self._m_occ is not None:
+            self._m_occ.set(min(len(self._q), self.capacity))
+            if stall == "push_stall":
+                self._m_push.inc()
+            elif stall == "pop_stall":
+                self._m_pop.inc()
         if not self.rec.enabled:
             return
         self.rec.counter(f"queue:{self.name}:occupancy",
@@ -145,6 +170,8 @@ def queue_specs(g: Graph, stage_of: dict[str, int],
 
 
 def build_queues(specs: dict[tuple[str, str], QueueSpec],
-                 recorder=NULL_RECORDER) -> dict[tuple[str, str], RingBuffer]:
+                 recorder=NULL_RECORDER,
+                 metrics=None) -> dict[tuple[str, str], RingBuffer]:
     return {e: RingBuffer(s.capacity, name=f"{s.src}->{s.dst}",
-                          recorder=recorder) for e, s in specs.items()}
+                          recorder=recorder, metrics=metrics)
+            for e, s in specs.items()}

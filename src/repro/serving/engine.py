@@ -35,7 +35,7 @@ import numpy as np
 from repro.core.compression import bfp8_decode, bfp8_encode
 from repro.models import decode_step, forward, init_cache, project_logits
 from repro.models.config import ArchConfig
-from repro.obs.trace import LatencyHistogram
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -48,22 +48,76 @@ class Request:
     done: bool = False
 
 
-@dataclasses.dataclass
-class EngineStats:
-    prefills: int = 0
-    decode_steps: int = 0
-    generated: int = 0
-    evicted_pages: int = 0
-    restored_pages: int = 0
-    evicted_bytes_raw: int = 0
-    evicted_bytes_compressed: int = 0
+class _RegistryStats:
+    """Base for the registry-backed stats views.
+
+    The engines used to keep hand-rolled stats dataclasses next to the
+    metrics; now the :class:`~repro.obs.metrics.MetricsRegistry` is the
+    single source of truth and these views are *live reads* of it — the
+    legacy attribute surface (``stats.prefills`` etc.) maps each field to
+    its metric sample, and ``report()`` is the registry snapshot filtered
+    to this front-end's namespace.
+    """
+
+    _PREFIX = "smof_"
+
+    def __init__(self, registry: MetricsRegistry) -> None:
+        self._registry = registry
+
+    def _value(self, name: str, **labels) -> int:
+        fam = self._registry.get(name)
+        return int(fam.labels(**labels).value)
+
+    def report(self) -> dict:
+        """All of this front-end's samples, from the registry snapshot."""
+        return {k: v for k, v in self._registry.snapshot().items()
+                if k.startswith(self._PREFIX)}
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.report()})"
+
+
+class EngineStats(_RegistryStats):
+    """Live view of the decode engine's counters (see ``_RegistryStats``)."""
+
+    _PREFIX = "smof_engine_"
+
+    @property
+    def prefills(self) -> int:
+        return self._value("smof_engine_prefills_total")
+
+    @property
+    def decode_steps(self) -> int:
+        return self._value("smof_engine_decode_steps_total")
+
+    @property
+    def generated(self) -> int:
+        return self._value("smof_engine_generated_tokens_total")
+
+    @property
+    def evicted_pages(self) -> int:
+        return self._value("smof_engine_evicted_pages_total")
+
+    @property
+    def restored_pages(self) -> int:
+        return self._value("smof_engine_restored_pages_total")
+
+    @property
+    def evicted_bytes_raw(self) -> int:
+        return self._value("smof_engine_evicted_bytes_total", kind="raw")
+
+    @property
+    def evicted_bytes_compressed(self) -> int:
+        return self._value("smof_engine_evicted_bytes_total",
+                           kind="compressed")
 
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
                  s_max: int = 256, dtype=jnp.float32,
                  evict_to_host: bool = False, resident_limit: int = 0,
-                 sampler: Callable | None = None):
+                 sampler: Callable | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.cfg = cfg
         self.params = params
         self.B = max_batch
@@ -78,9 +132,35 @@ class ServingEngine:
         self.slots: list[Request | None] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)
         self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.stats = EngineStats()
-        # submit -> retire wall clock per request (log-bucketed)
-        self.latency = LatencyHistogram()
+        # every engine counter lives in one MetricsRegistry (own registry by
+        # default so engines never cross-talk; pass one to share a scrape
+        # surface); self.stats is a live view over it
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_prefills = m.counter(
+            "smof_engine_prefills_total", "prompt prefills run")
+        self._c_decode = m.counter(
+            "smof_engine_decode_steps_total", "lockstep decode steps")
+        self._c_generated = m.counter(
+            "smof_engine_generated_tokens_total",
+            "tokens sampled across all slots")
+        self._c_evicted_pages = m.counter(
+            "smof_engine_evicted_pages_total",
+            "KV pages BFP8-evicted across the HBM -> host boundary")
+        self._c_restored_pages = m.counter(
+            "smof_engine_restored_pages_total",
+            "KV pages restored into HBM (resident or via BFP8 decode)")
+        self._c_evicted_bytes = m.counter(
+            "smof_engine_evicted_bytes_total",
+            "KV eviction traffic in bytes, raw (bf16 words) vs compressed",
+            ("kind",))
+        self._h_latency = m.histogram(
+            "smof_engine_request_latency_seconds",
+            "submit -> retire wall clock per request")
+        self.stats = EngineStats(m)
+        # submit -> retire wall clock per request (log-bucketed); the same
+        # LatencyHistogram the registry histogram exposes, one data structure
+        self.latency = self._h_latency.labels().hist
         self._submit_ts: dict[int, float] = {}
         self.host_store: dict[int, dict] = {}    # rid -> evicted pages
         # rid -> raw pages still in HBM, in retirement order (FIFO eviction)
@@ -122,7 +202,7 @@ class ServingEngine:
         self.cache = jax.tree.map(
             lambda c, n: c.at[:, slot].set(n[:, 0]), self.cache, new_cache)
         self.pos[slot] = S
-        self.stats.prefills += 1
+        self._c_prefills.inc()
 
     def _retire(self, slot: int) -> None:
         r = self.slots[slot]
@@ -161,12 +241,13 @@ class ServingEngine:
         for name, page in pages.items():
             page = np.asarray(page, np.float32)
             enc = bfp8_encode(page)
-            self.stats.evicted_bytes_raw += page.size * 2      # bf16 words
-            self.stats.evicted_bytes_compressed += (
+            self._c_evicted_bytes.labels(kind="raw").inc(
+                page.size * 2)                                 # bf16 words
+            self._c_evicted_bytes.labels(kind="compressed").inc(
                 enc.mantissas.size + enc.exponents.size)
             enc_pages[name] = enc
         self.host_store[rid] = enc_pages
-        self.stats.evicted_pages += len(enc_pages)
+        self._c_evicted_pages.inc(len(enc_pages))
 
     def restore_request(self, rid: int, slot: int) -> None:
         """Bring an evicted request's pages back into HBM (resumption).
@@ -184,7 +265,7 @@ class ServingEngine:
         def restore_leaf(path, c):
             name = "/".join(str(getattr(p, "key", p)) for p in path)
             page = np.asarray(page_for(name, c)).astype(np.asarray(c).dtype)
-            self.stats.restored_pages += 1
+            self._c_restored_pages.inc()
             return c.at[:, slot].set(jnp.asarray(page))
         self.cache = jax.tree_util.tree_map_with_path(restore_leaf, self.cache)
         if resident is None:
@@ -204,12 +285,12 @@ class ServingEngine:
             self.params, self.cache, jnp.asarray(last),
             jnp.asarray(self.pos, jnp.int32))
         nxt = np.asarray(self.sampler(logits))
-        self.stats.decode_steps += 1
+        self._c_decode.inc()
         for b in active:
             r = self.slots[b]
             self.pos[b] += 1
             r.out_tokens.append(int(nxt[b]))
-            self.stats.generated += 1
+            self._c_generated.inc()
             if (len(r.out_tokens) >= r.max_new_tokens
                     or (r.eos is not None and int(nxt[b]) == r.eos)
                     or self.pos[b] >= self.s_max - 1):
@@ -222,17 +303,36 @@ class ServingEngine:
             if self.step() == 0 and self.queue.empty():
                 return
 
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of this engine's registry."""
+        return self.metrics.metrics_text()
+
 
 # =============================================================================
 # Batched exec-graph front-end feeding the pipelined streamer
 # =============================================================================
 
-@dataclasses.dataclass
-class StreamServerStats:
-    frames_in: int = 0
-    frames_out: int = 0
-    streams_run: int = 0
-    padded_frames: int = 0       # bubble frames added to fill the last stream
+class StreamServerStats(_RegistryStats):
+    """Live view of the stream server's counters (see ``_RegistryStats``)."""
+
+    _PREFIX = "smof_server_"
+
+    @property
+    def frames_in(self) -> int:
+        return self._value("smof_server_frames_in_total")
+
+    @property
+    def frames_out(self) -> int:
+        return self._value("smof_server_frames_out_total")
+
+    @property
+    def streams_run(self) -> int:
+        return self._value("smof_server_streams_total")
+
+    @property
+    def padded_frames(self) -> int:
+        # bubble frames added to fill the last stream
+        return self._value("smof_server_padded_frames_total")
 
 
 class GraphStreamServer:
@@ -253,7 +353,8 @@ class GraphStreamServer:
     """
 
     def __init__(self, g=None, plan=None, *, microbatches: int = 8,
-                 executor=None, spec=None, **lower_kw):
+                 executor=None, spec=None, metrics: MetricsRegistry | None = None,
+                 slo=None, **lower_kw):
         from repro.api import CompileSpec, compile as smof_compile
         if executor is None:
             if spec is None:
@@ -263,10 +364,40 @@ class GraphStreamServer:
             executor = smof_compile(spec).executor
         self.executor = executor
         self.microbatches = executor.microbatches
-        self.stats = StreamServerStats()
+        # registry-backed accounting (own registry by default; pass one to
+        # share a scrape surface, e.g. Compiled.serve threads the artifact's)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_frames_in = m.counter(
+            "smof_server_frames_in_total", "frames submitted to the server")
+        self._c_frames_out = m.counter(
+            "smof_server_frames_out_total", "frames delivered by flush")
+        self._c_streams = m.counter(
+            "smof_server_streams_total",
+            "fixed-length microbatch streams executed")
+        self._c_padded = m.counter(
+            "smof_server_padded_frames_total",
+            "bubble frames padded onto stream tails")
+        self._h_latency = m.histogram(
+            "smof_server_frame_latency_seconds",
+            "submit -> flush-delivery wall clock per frame")
+        self._c_slo = m.counter(
+            "smof_server_slo_evaluations_total",
+            "per-flush SLO evaluations, by verdict", ("verdict",))
+        self.stats = StreamServerStats(m)
         # submit -> flush-delivery wall clock per frame (log-bucketed):
-        # queueing delay + padding bubbles + the stream's pipeline run
-        self.latency = LatencyHistogram()
+        # queueing delay + padding bubbles + the stream's pipeline run; the
+        # same LatencyHistogram the registry histogram exposes
+        self.latency = self._h_latency.labels().hist
+        self.slo = slo                       # obs.slo.SloEvaluator | None
+        self.flight = None                   # obs.flight.FlightRecorder | None
+        # per stream executed, every spill record moves offchip_bits once
+        # per microbatch in each direction (evict + restore) — the window
+        # sample the SLO's spill-bandwidth objective scores
+        self._spill_bytes_per_stream = sum(
+            (r.offchip_bits // 8) * 2
+            for r in getattr(executor.report, "spills", ())
+        ) * self.microbatches
         self.autotune_result = None          # set by .autotuned()
         self._pending: list[tuple[int, np.ndarray]] = []
         self._results: dict[int, np.ndarray] = {}
@@ -303,11 +434,17 @@ class GraphStreamServer:
                               np.asarray(frame, np.float32)))
         self._submit_ts[self._next_ticket] = time.perf_counter()
         self._next_ticket += 1
-        self.stats.frames_in += 1
+        self._c_frames_in.inc()
         return self._next_ticket - 1
 
     def flush(self) -> dict[int, np.ndarray]:
-        """Run all queued frames; returns {ticket: output} for this flush."""
+        """Run all queued frames; returns {ticket: output} for this flush.
+
+        With an attached SLO evaluator (:meth:`enable_slo`), every stream
+        run lands one window observation and is re-scored — breaches fire
+        the evaluator's ``on_breach`` hooks (e.g. a flight-recorder dump)
+        and the verdict counts into ``smof_server_slo_evaluations_total``.
+        """
         out: dict[int, np.ndarray] = {}
         B = self.microbatches
         while self._pending:
@@ -317,18 +454,56 @@ class GraphStreamServer:
             if pad:
                 xs = np.concatenate(
                     [xs, np.zeros((pad,) + xs.shape[1:], np.float32)])
-                self.stats.padded_frames += pad
+                self._c_padded.inc(pad)
+            t_run = time.perf_counter()
             ys = np.asarray(self.executor(jnp.asarray(xs)))
-            self.stats.streams_run += 1
+            run_s = time.perf_counter() - t_run
+            self._c_streams.inc()
             now = time.perf_counter()
             for (ticket, _), y in zip(chunk, ys):
                 out[ticket] = y
-                self.stats.frames_out += 1
+                self._c_frames_out.inc()
                 t0 = self._submit_ts.pop(ticket, None)
                 if t0 is not None:
                     self.latency.record(now - t0)
+            if self.slo is not None:
+                self.slo.observe(frames=len(chunk), seconds=run_s,
+                                 spill_bytes=self._spill_bytes_per_stream)
+                verdict = self.slo.evaluate().verdict
+                self._c_slo.labels(verdict=verdict).inc()
         self._results.update(out)
         return out
+
+    # -- observability surface ------------------------------------------------
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of this server's registry."""
+        return self.metrics.metrics_text()
+
+    def roofline_fps(self) -> float | None:
+        """The served plan's Eq. 6 throughput bound in frames/s, when the
+        plan's provenance carries a calibrated ``s_per_cycle`` (autotuned
+        artifacts do): ``1 / (eq6_cycles * s_per_cycle)``."""
+        plan = getattr(self.executor, "plan", None)
+        spc = plan.provenance.get("s_per_cycle") if plan is not None else None
+        eq6 = getattr(self.executor.report, "eq6_time", None)
+        if spc and eq6:
+            return 1.0 / (eq6 * spc)
+        return None
+
+    def enable_slo(self, cfg=None, *, roofline_fps=None, bw_gbps=None):
+        """Attach a rolling-window SLO evaluator, re-scored on every flush.
+
+        ``roofline_fps`` defaults to :meth:`roofline_fps` (calibrated
+        plans only); ``bw_gbps`` is the device's off-chip budget for the
+        spill-bandwidth objective.  Returns the evaluator so callers can
+        hook ``on_breach`` (e.g. ``FlightRecorder.on_slo_report``).
+        """
+        from repro.obs.slo import SloEvaluator
+        if roofline_fps is None:
+            roofline_fps = self.roofline_fps()
+        self.slo = SloEvaluator(cfg, roofline_fps=roofline_fps,
+                                bw_gbps=bw_gbps, latency=self.latency)
+        return self.slo
 
     def result(self, ticket: int) -> np.ndarray:
         """Claim a flushed output (one-shot: the server does not keep

@@ -1,0 +1,89 @@
+"""Bench regression-gate tests (ISSUE 7 satellite): the write/compare
+logic behind ``benchmarks/run.py --baseline`` / ``--check-baseline``."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.baseline import (check_baseline, git_sha,  # noqa: E402
+                                 row_key, write_baseline)
+
+
+def _row(**over):
+    base = {"executor": "pipelined", "model": "unet_exec", "codecs": "none",
+            "n_stages": 3, "microbatches": 8, "fps_executed": 1000.0,
+            "fps_eq5": 800.0, "fps_eq6": 1200.0, "rel_err": 1e-6,
+            "offchip_kbits": 512.0, "evicted": 2, "fragged": 1}
+    base.update(over)
+    return base
+
+
+class TestBaselineGate:
+    def test_write_stamps_provenance(self, tmp_path):
+        p = write_baseline([_row()], tmp_path / "b.json", note="smoke")
+        d = json.loads(p.read_text())
+        assert d["kind"] == "smof-bench-baseline"
+        assert d["git_sha"] == git_sha() != ""
+        assert d["generated_unix"] > 0 and d["note"] == "smoke"
+        assert row_key(_row()) in d["rows"]
+
+    def test_identical_rows_pass(self, tmp_path):
+        p = write_baseline([_row()], tmp_path / "b.json")
+        failures, notes = check_baseline([_row()], p)
+        assert failures == [] and len(notes) == 2
+
+    def test_fps_drop_beyond_tolerance_fails(self, tmp_path):
+        p = write_baseline([_row()], tmp_path / "b.json")
+        # 35% of baseline: below the 40% floor -> regression
+        failures, _ = check_baseline([_row(fps_executed=350.0)], p)
+        assert any("fps_executed" in f and "dropped below" in f
+                   for f in failures)
+        # 50% of baseline: noisy but within the one-sided tolerance
+        failures, _ = check_baseline([_row(fps_executed=500.0)], p)
+        assert failures == []
+        # fps *gains* never fail (one-sided gate)
+        failures, _ = check_baseline([_row(fps_executed=9000.0)], p)
+        assert failures == []
+
+    def test_plan_shape_metrics_are_exact(self, tmp_path):
+        p = write_baseline([_row()], tmp_path / "b.json")
+        failures, _ = check_baseline([_row(n_stages=4)], p)
+        # a changed stage count is both an exact-metric failure and a
+        # missing row (n_stages is part of the row key)
+        assert any("present in baseline but not measured" in f
+                   for f in failures)
+        failures, _ = check_baseline([_row(evicted=3)], p)
+        assert any("evicted" in f and "exact" in f for f in failures)
+
+    def test_offchip_and_rel_err_tolerances(self, tmp_path):
+        p = write_baseline([_row()], tmp_path / "b.json")
+        failures, _ = check_baseline([_row(offchip_kbits=512.0 * 1.005)], p)
+        assert failures == []                       # within 1%
+        failures, _ = check_baseline([_row(offchip_kbits=512.0 * 1.05)], p)
+        assert any("offchip_kbits" in f for f in failures)
+        failures, _ = check_baseline([_row(rel_err=0.01)], p)
+        assert any("rel_err" in f and "grew past" in f for f in failures)
+
+    def test_missing_row_fails_new_row_is_note(self, tmp_path):
+        p = write_baseline([_row()], tmp_path / "b.json")
+        failures, notes = check_baseline(
+            [_row(model="x3d_exec")], p)            # renamed = gone + new
+        assert any("not measured" in f for f in failures)
+        assert any("new row" in n for n in notes)
+
+    def test_wrong_artifact_kind_rejected(self, tmp_path):
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"rows": {}}))
+        with pytest.raises(ValueError, match="smof-bench-baseline"):
+            check_baseline([], bad)
+
+    def test_committed_smoke_baseline_is_a_valid_artifact(self):
+        committed = Path(__file__).resolve().parents[1] / "BENCH_smoke.json"
+        d = json.loads(committed.read_text())
+        assert d["kind"] == "smof-bench-baseline"
+        assert len(d["rows"]) == 8                  # 2 codecs x 2 cuts x 2 ex
+        for key, row in d["rows"].items():
+            assert row_key(row) == key
+            assert row["fps_executed"] > 0

@@ -322,10 +322,20 @@ class TestFacadeObs:
     def test_obsconfig_dict_roundtrip_ignores_unknown_keys(self):
         cfg = ObsConfig(enabled=True, trace_path="t.json")
         d = cfg.to_dict()
-        assert d == {"enabled": True, "trace_path": "t.json"}
+        assert d == {"enabled": True, "trace_path": "t.json", "slo": None,
+                     "flight_capacity": 0, "flight_path": None}
         assert ObsConfig.from_dict(d) == cfg
         assert ObsConfig.from_dict(d | {"future_knob": 1}) == cfg
         assert ObsConfig.from_dict({}) == ObsConfig()
+
+    def test_obsconfig_roundtrips_nested_slo_config(self):
+        from repro.obs import SloConfig
+        cfg = ObsConfig(slo=SloConfig(window=8, p99_target_s=0.5),
+                        flight_capacity=256, flight_path="f.json")
+        d = cfg.to_dict()
+        assert d["slo"]["window"] == 8          # nests as a plain dict
+        back = ObsConfig.from_dict(json.loads(json.dumps(d)))
+        assert back == cfg and isinstance(back.slo, SloConfig)
 
     def test_save_load_roundtrips_obs_config(self, tmp_path):
         c = repro.compile(_spec(mode="staged",
@@ -380,7 +390,7 @@ class TestLatencyHistogram:
     def test_empty_summary_is_zeroed(self):
         s = LatencyHistogram().summary()
         assert s == {"count": 0, "mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0,
-                     "max_s": 0.0}
+                     "p99_s": 0.0, "min_s": 0.0, "max_s": 0.0}
 
     def test_records_and_conservative_quantiles(self):
         h = LatencyHistogram()

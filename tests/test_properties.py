@@ -362,3 +362,28 @@ def test_buffer_depths_nonnegative_any_dag(seed, width):
     g.compute_buffer_depths()
     for e in g.edges():
         assert e.buffer_depth >= 2.0
+
+
+@given(st.lists(st.floats(1e-9, 100.0, allow_nan=False,
+                          allow_infinity=False),
+                min_size=1, max_size=64),
+       st.lists(st.floats(0.0, 1.0, allow_nan=False, allow_infinity=False),
+                min_size=2, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_latency_histogram_quantile_monotone_and_bounded(values, qs):
+    """The serving-layer quantile estimator (ISSUE 7): for any recorded
+    sample set, ``quantile(q)`` is monotone non-decreasing in q and every
+    estimate lies within [min recorded, max recorded] — the log2-bucket
+    upper-edge answer is conservative but never escapes the data."""
+    from repro.obs import LatencyHistogram
+    h = LatencyHistogram()
+    for v in values:
+        h.record(v)
+    lo, hi = min(values), max(values)
+    estimates = [h.quantile(q) for q in sorted(qs)]
+    assert estimates == sorted(estimates)
+    for est in estimates:
+        assert lo <= est <= hi
+    s = h.summary()
+    assert s["min_s"] == lo and s["max_s"] == hi
+    assert s["p50_s"] <= s["p95_s"] <= s["p99_s"] <= hi

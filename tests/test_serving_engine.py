@@ -140,3 +140,66 @@ class TestGraphStreamServer:
         np.testing.assert_array_equal(srv.result(tickets[0]), out[tickets[0]])
         with pytest.raises(KeyError):
             srv.result(tickets[0])
+
+
+class TestMetricsSurface:
+    """ISSUE 7: both serving front-ends expose one registry-backed scrape
+    surface; the legacy stats objects are live views of the same registry."""
+
+    def test_engine_metrics_text_round_trips_and_matches_stats(self):
+        from repro.obs import parse_metrics_text
+        eng = _engine(evict_to_host=True)
+        eng.submit(np.arange(8), max_new_tokens=4)
+        eng.run_until_drained()
+        fams = parse_metrics_text(eng.metrics_text())
+        assert fams["smof_engine_prefills_total"]["samples"][
+            "smof_engine_prefills_total"] == eng.stats.prefills == 1
+        assert eng.stats.decode_steps > 0 and eng.stats.generated > 0
+        assert eng.stats.evicted_pages > 0
+        # BFP8 eviction compresses: compressed bytes < raw bytes, and both
+        # land as one labeled family
+        assert 0 < eng.stats.evicted_bytes_compressed \
+            < eng.stats.evicted_bytes_raw
+        kinds = fams["smof_engine_evicted_bytes_total"]["samples"]
+        assert kinds['smof_engine_evicted_bytes_total{kind="raw"}'] \
+            == eng.stats.evicted_bytes_raw
+        # request latency is a real histogram family on the same surface
+        assert fams["smof_engine_request_latency_seconds"]["type"] \
+            == "histogram"
+        # the legacy .latency attr and the registry read one histogram
+        assert eng.latency.n == fams["smof_engine_request_latency_seconds"][
+            "samples"]["smof_engine_request_latency_seconds_count"] == 1
+
+    def test_engine_stats_report_is_the_registry_snapshot(self):
+        eng = _engine()
+        eng.submit(np.arange(4), max_new_tokens=2)
+        eng.run_until_drained()
+        rep = eng.stats.report()
+        assert set(rep) <= set(eng.metrics.snapshot())
+        assert all(k.startswith("smof_engine_") for k in rep)
+        assert rep["smof_engine_prefills_total"] == 1.0
+        assert "smof_engine_prefills_total" in repr(eng.stats)
+
+    def test_stream_server_metrics_text_round_trips(self):
+        from repro.obs import parse_metrics_text
+        g = build_unet_exec(positions=32, levels=2)
+        g.compute_buffer_depths()
+        topo = g.topo()
+        plan = ExecutionPlan(
+            model=g.name, device="tiny", n_stages=1,
+            layers={n: LayerPlan(name=n, stage=0) for n in topo},
+            streams=[StreamPlan(e.src, e.dst) for e in g.edges()],
+            topo_order=topo)
+        srv = GraphStreamServer(g, plan, microbatches=4,
+                                kernel_mode="reference")
+        for i in range(6):
+            srv.submit(np.zeros((32, 32), np.float32))
+        srv.flush()
+        fams = parse_metrics_text(srv.metrics_text())
+        s = {k: v for f in fams.values() for k, v in f["samples"].items()}
+        assert s["smof_server_frames_in_total"] == 6.0
+        assert s["smof_server_frames_out_total"] == 6.0
+        assert s["smof_server_streams_total"] == srv.stats.streams_run == 2.0
+        assert s["smof_server_padded_frames_total"] == 2.0
+        assert s["smof_server_frame_latency_seconds_count"] == 6.0
+        assert srv.stats.report()["smof_server_frames_in_total"] == 6.0

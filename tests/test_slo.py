@@ -1,0 +1,246 @@
+"""SLO evaluation + flight recorder tests (ISSUE 7 tentpole).
+
+The contract under test:
+
+* :class:`SloEvaluator` scores the four objectives (Eq. 6 fps roofline,
+  latency quantiles, Eq. 1 stall ratio, spill bandwidth vs the device
+  budget) over a rolling window, each banding pass/warn/breach, and
+  skips objectives without data or targets;
+* a breach fires every ``on_breach`` callback;
+* :class:`FlightRecorder` is a bounded-ring ``TraceRecorder`` whose
+  dumps are valid Chrome traces, triggered by SLO breaches and failed
+  ModelChecks;
+* the acceptance path: an artificially throttled serving run is flagged
+  as a breach and the flight recorder dumps a valid trace for it.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import build_unet_exec
+from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan
+from repro.obs import (BREACH, PASS, WARN, FlightRecorder, SloConfig,
+                       SloEvaluator, validate_chrome_trace)
+
+
+class _FixedLatency:
+    """A stub quantile(q) provider."""
+
+    def __init__(self, p50, p99):
+        self._q = {0.50: p50, 0.99: p99}
+
+    def quantile(self, q):
+        return self._q[q]
+
+
+def _stub_clock(step=1.0):
+    state = [0.0]
+
+    def clock():
+        state[0] += step
+        return state[0]
+
+    return clock
+
+
+# =============================================================================
+# SloConfig + evaluator scoring
+# =============================================================================
+
+class TestSloConfig:
+    def test_dict_roundtrip_ignores_unknown_keys(self):
+        cfg = SloConfig(window=8, p99_target_s=0.25)
+        d = cfg.to_dict()
+        assert SloConfig.from_dict(d) == cfg
+        assert SloConfig.from_dict(d | {"future": 1}) == cfg
+        assert SloConfig.from_dict({}) == SloConfig()
+
+
+class TestSloEvaluator:
+    def test_no_data_no_targets_means_no_checks(self):
+        ev = SloEvaluator()                       # nothing configured
+        ev.observe(frames=10, seconds=1.0)
+        rep = ev.evaluate()
+        assert rep.checks == [] and rep.verdict == PASS and rep.ok
+
+    def test_negative_observation_rejected(self):
+        ev = SloEvaluator()
+        with pytest.raises(ValueError, match="negative"):
+            ev.observe(frames=-1, seconds=1.0)
+        with pytest.raises(ValueError, match="negative"):
+            ev.observe(frames=1, seconds=-1.0)
+
+    @pytest.mark.parametrize("fps,verdict", [
+        (90.0, PASS),        # 0.9 of roofline
+        (30.0, WARN),        # 0.3: below warn fraction 0.5
+        (10.0, BREACH),      # 0.1: below breach fraction 0.25
+    ])
+    def test_fps_vs_roofline_bands(self, fps, verdict):
+        ev = SloEvaluator(roofline_fps=100.0)
+        ev.observe(frames=fps, seconds=1.0)
+        (check,) = ev.evaluate().checks
+        assert check.objective == "fps" and check.verdict == verdict
+        assert check.measured == pytest.approx(fps)
+        assert check.target == pytest.approx(25.0)   # breach floor in fps
+
+    def test_latency_quantile_bands(self):
+        cfg = SloConfig(p50_target_s=0.1, p99_target_s=1.0)
+        ev = SloEvaluator(cfg, latency=_FixedLatency(p50=0.09, p99=1.5))
+        ev.observe(frames=1, seconds=1.0)
+        by_name = {c.objective: c for c in ev.evaluate().checks}
+        assert by_name["latency_p50"].verdict == WARN    # > 0.8 * target
+        assert by_name["latency_p99"].verdict == BREACH  # > target
+
+    def test_stall_ratio_bands_and_skip_without_ops(self):
+        ev = SloEvaluator()
+        ev.observe(frames=1, seconds=1.0)                 # no queue ops
+        assert ev.evaluate().checks == []
+        ev.observe(frames=1, seconds=1.0, stalls=20, queue_ops=100)
+        (check,) = ev.evaluate().checks
+        assert check.objective == "stall_ratio"
+        assert check.measured == pytest.approx(0.2)       # 20%: breach
+        assert check.verdict == BREACH
+
+    def test_spill_bw_vs_device_budget(self):
+        ev = SloEvaluator(bw_gbps=64.0)
+        # 5 GB in 1s = 40 Gbps = 0.625 of budget -> warn band
+        ev.observe(frames=1, seconds=1.0, spill_bytes=5e9)
+        (check,) = ev.evaluate().checks
+        assert check.objective == "spill_bw"
+        assert check.measured == pytest.approx(40.0)
+        assert check.verdict == WARN
+
+    def test_rolling_window_evicts_old_samples(self):
+        ev = SloEvaluator(SloConfig(window=4), roofline_fps=100.0)
+        ev.observe(frames=1, seconds=1.0)                 # 1 fps: breach...
+        for _ in range(4):
+            ev.observe(frames=90, seconds=1.0)            # ...pushed out
+        rep = ev.evaluate()
+        assert rep.window["samples"] == 4
+        assert rep.verdict == PASS
+
+    def test_report_verdict_is_worst_and_breach_fires_callbacks(self):
+        cfg = SloConfig(p50_target_s=1.0)
+        ev = SloEvaluator(cfg, roofline_fps=100.0,
+                          latency=_FixedLatency(p50=0.1, p99=0.1))
+        fired = []
+        ev.on_breach.append(fired.append)
+        ev.observe(frames=90, seconds=1.0)
+        rep = ev.evaluate()                               # all pass
+        assert rep.ok and fired == [] and ev.last_report is rep
+        for _ in range(64):
+            ev.observe(frames=1, seconds=1.0)             # throttle hard
+        rep = ev.evaluate()
+        assert rep.verdict == BREACH and not rep.ok
+        assert [c.objective for c in rep.breaches()] == ["fps"]
+        assert fired == [rep]
+        assert rep.summary()["checks"][0]["detail"].startswith("0.01")
+
+
+# =============================================================================
+# Flight recorder
+# =============================================================================
+
+class TestFlightRecorder:
+    def test_ring_is_bounded_and_keeps_newest(self):
+        rec = FlightRecorder(capacity=8, clock=_stub_clock())
+        for i in range(50):
+            rec.add_span(f"tick{i}", float(i), 1.0, track="pipeline")
+        assert len(rec._events) == 8
+        assert [e["name"] for e in rec._events] == \
+            [f"tick{i}" for i in range(42, 50)]
+
+    def test_capacity_must_be_positive(self):
+        with pytest.raises(ValueError, match="capacity"):
+            FlightRecorder(capacity=0)
+
+    def test_dump_requires_a_path(self):
+        rec = FlightRecorder(capacity=4, clock=_stub_clock())
+        rec.instant("x")
+        with pytest.raises(ValueError, match="no dump path"):
+            rec.dump()
+
+    def test_manual_dump_is_a_valid_chrome_trace(self, tmp_path):
+        rec = FlightRecorder(capacity=16, path=tmp_path / "f.json",
+                             clock=_stub_clock())
+        rec.add_span("tick", 0.0, 1.0, track="pipeline")
+        p = rec.dump(reason="operator")
+        stats = validate_chrome_trace(json.loads(p.read_text()))
+        assert stats["spans"] == 1 and stats["instants"] == 1
+        assert rec.dumps == [(p, "operator")]
+
+    def test_slo_pass_does_not_dump_breach_does(self, tmp_path):
+        rec = FlightRecorder(capacity=16, path=tmp_path / "f.json",
+                             clock=_stub_clock())
+        rec.add_span("tick", 0.0, 1.0, track="pipeline")
+        ev = SloEvaluator(roofline_fps=100.0)
+        ev.on_breach.append(rec.on_slo_report)
+        ev.observe(frames=90, seconds=1.0)
+        assert ev.evaluate().ok and rec.dumps == []
+        ev = SloEvaluator(roofline_fps=100.0)     # fresh window, throttled
+        ev.on_breach.append(rec.on_slo_report)
+        ev.observe(frames=1, seconds=1.0)
+        assert not ev.evaluate().ok
+        (path, reason) = rec.dumps[0]
+        assert reason == "slo_breach:fps"
+        data = json.loads(path.read_text())
+        validate_chrome_trace(data)
+        (inst,) = [e for e in data["traceEvents"]
+                   if e["ph"] == "i" and e["name"] == "flight:dump"]
+        assert inst["args"]["reason"] == "slo_breach:fps"
+
+    def test_model_check_failure_dumps(self, tmp_path):
+        class _BadCheck:
+            ok = False
+            ticks_ok = False
+            queues_ok = True
+
+        rec = FlightRecorder(capacity=4, path=tmp_path / "f.json",
+                             clock=_stub_clock())
+        rec.instant("stall", track="queues")
+        assert rec.on_model_check(_BadCheck()) is not None
+        assert rec.dumps[0][1] == "model_check:ticks"
+        ok = type("OkCheck", (), {"ok": True})()
+        assert rec.on_model_check(ok) is None and len(rec.dumps) == 1
+
+
+# =============================================================================
+# Acceptance: throttled serving run -> breach -> flight dump
+# =============================================================================
+
+class TestThrottledServing:
+    def _server(self):
+        from repro.serving.engine import GraphStreamServer
+        g = build_unet_exec(positions=32, levels=2)
+        g.compute_buffer_depths()
+        topo = g.topo()
+        plan = ExecutionPlan(
+            model=g.name, device="tiny", n_stages=1,
+            layers={n: LayerPlan(name=n, stage=0) for n in topo},
+            streams=[StreamPlan(e.src, e.dst) for e in g.edges()],
+            topo_order=topo)
+        return GraphStreamServer(g, plan, microbatches=2,
+                                 kernel_mode="reference")
+
+    def test_throttled_run_breaches_and_dumps_flight_trace(self, tmp_path):
+        srv = self._server()
+        # a roofline far above anything a CPU run can deliver = an
+        # artificially throttled run relative to the claimed Eq. 6 bound
+        ev = srv.enable_slo(roofline_fps=1e12)
+        flight = FlightRecorder(capacity=64, path=tmp_path / "flight.json")
+        ev.on_breach.append(flight.on_slo_report)
+        srv.flight = flight
+        for _ in range(4):
+            srv.submit(np.zeros((32, 32), np.float32))
+        srv.flush()
+        rep = ev.last_report
+        assert rep is not None and not rep.ok
+        assert "fps" in [c.objective for c in rep.breaches()]
+        (path, reason) = flight.dumps[0]
+        assert reason.startswith("slo_breach:")
+        validate_chrome_trace(json.loads(path.read_text()))
+        # the breach verdict also lands on the scrape surface
+        snap = srv.metrics.snapshot()
+        assert snap['smof_server_slo_evaluations_total{verdict="breach"}'] \
+            >= 1.0

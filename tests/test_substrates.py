@@ -160,6 +160,45 @@ class TestFaultTolerance:
         loop.run({}, lambda s: s, start_step=0, num_steps=12)
         assert any(e["kind"] == "straggler" for e in loop.events)
 
+    def test_recovery_events_land_in_metrics_registry(self, tmp_path):
+        """ISSUE 7 satellite: with a MetricsRegistry attached, every
+        fault-tolerance event mirrors into smof_fault_events_total{kind}
+        and step wall times into the smof_fault_step_seconds histogram —
+        same counts as the in-memory events list."""
+        from collections import Counter as TallyCounter
+
+        from repro.obs.metrics import MetricsRegistry
+
+        reg = MetricsRegistry()
+        store = CheckpointStore(str(tmp_path))
+        calls = {}
+
+        def step_fn(state, batch):
+            return {"x": state["x"] + batch}
+
+        def injector(step):
+            if step == 4 and not calls.setdefault("f", 0):
+                calls["f"] = 1
+                raise RuntimeError("injected")
+
+        loop = FaultTolerantLoop(step_fn, store,
+                                 FaultConfig(checkpoint_every=3,
+                                             max_retries=1),
+                                 fault_injector=injector, metrics=reg)
+        out = loop.run({"x": 0}, lambda s: 1, start_step=0, num_steps=9)
+        assert out["x"] == 9
+        fam = reg.get("smof_fault_events_total")
+        tally = TallyCounter(e["kind"] for e in loop.events)
+        assert tally["retry"] == 1 and tally["checkpoint"] >= 2
+        for kind, n in tally.items():
+            assert fam.labels(kind=kind).value == n
+        snap = reg.snapshot()
+        assert snap["smof_fault_step_seconds_count"] == len(loop.records)
+        # and the exposition of the whole thing is scrapeable
+        from repro.obs import parse_metrics_text
+        assert "smof_fault_events_total" in \
+            parse_metrics_text(reg.metrics_text())
+
 
 class TestOptimizer:
     def test_schedule_warmup_and_decay(self):
