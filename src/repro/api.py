@@ -163,6 +163,9 @@ def build_plan(spec: CompileSpec, graph: Graph | None = None, *,
     cfg = None
     if spec.strategy == "manual-plan":
         plan = spec.plan
+        if plan is not None:
+            plan.validate()       # typed PlanValidationError, not a crash
+                                  # deep inside the lowering
     elif spec.strategy == "autotune":
         from .optim.autotune import AutotuneConfig, autotune
         cfg = spec.autotune_cfg or AutotuneConfig(
@@ -393,7 +396,7 @@ class Compiled:
         return y, mc
 
     # -- serving --------------------------------------------------------------
-    def serve(self, **kw):
+    def serve(self, *, resident_limit: int = 0, **kw):
         """Batched streaming front-end around this design.
 
         Reuses the pipelined executor when this artifact is already
@@ -402,6 +405,8 @@ class Compiled:
         overrides (e.g. ``microbatches=16``).  Unless overridden, the
         stream depth follows the current executor's (so an autotuned
         artifact keeps serving at the depth the search measured at).
+        ``resident_limit`` bounds the flushed-but-unclaimed results kept
+        resident by the server (oldest spill to an exact host byte store).
 
         The server shares this artifact's metrics registry (one scrape
         surface, read via :meth:`metrics` / ``server.metrics_text()``).
@@ -426,7 +431,8 @@ class Compiled:
             sx = compile(dataclasses.replace(
                 self.spec, mode="pipelined", strategy="manual-plan",
                 plan=self.plan, **kw)).executor
-        srv = GraphStreamServer(executor=sx, metrics=self.registry)
+        srv = GraphStreamServer(executor=sx, metrics=self.registry,
+                                resident_limit=resident_limit)
         srv.autotune_result = self.autotune_result
         if self.spec.obs.slo is not None:
             try:

@@ -183,6 +183,61 @@ class Graph:
     def sinks(self) -> list[str]:
         return [n for n in self.g.nodes if self.g.out_degree(n) == 0]
 
+    # -- surgery (generator / shrinker hooks) ---------------------------------
+    def remove_edge(self, src: str, dst: str) -> None:
+        """Drop one edge (the shrinker's cheapest simplification)."""
+        self.g.remove_edge(src, dst)
+
+    def remove_vertex(self, name: str, reconnect: bool = False) -> None:
+        """Drop a vertex and its incident edges.
+
+        With ``reconnect=True`` (single-predecessor vertices only), every
+        successor is re-wired to the predecessor — how the fuzz shrinker
+        deletes a shape-preserving op from a failing case without breaking
+        the surrounding topology.  Re-wired edges keep the successor-side
+        edge's attributes, so eviction flags survive the splice.
+        """
+        if reconnect:
+            preds = self.predecessors(name)
+            if len(preds) != 1:
+                raise ValueError(
+                    f"cannot reconnect around {name!r}: it has "
+                    f"{len(preds)} predecessors (need exactly 1)")
+            p = preds[0]
+            for s in self.successors(name):
+                if self.g.has_edge(p, s):
+                    raise ValueError(
+                        f"cannot reconnect around {name!r}: edge "
+                        f"{(p, s)} already exists")
+                e = self.edge(name, s)
+                self.g.add_edge(p, s, e=dataclasses.replace(e, src=p))
+        self.g.remove_node(name)
+
+    def validate(self) -> None:
+        """Structural invariants every lowerable graph must satisfy.
+
+        The fuzz generator and shrinker call this after every construction
+        or surgery step: the graph must be a DAG, its unique source must be
+        the ``input`` vertex, its sinks must all be ``output`` vertices,
+        and every multi-input op must actually have inputs.  Violations
+        raise ``ValueError`` with all problems listed.
+        """
+        errs: list[str] = []
+        if not nx.is_directed_acyclic_graph(self.g):
+            errs.append("graph has a cycle")
+        srcs = self.sources()
+        if len(srcs) != 1 or (srcs and self.vertex(srcs[0]).kind != "input"):
+            errs.append(f"expected one 'input' source, got {srcs}")
+        for n in self.sinks():
+            if self.vertex(n).kind != "output":
+                errs.append(f"sink {n!r} is {self.vertex(n).kind!r}, "
+                            f"not 'output'")
+        for v in self.vertices():
+            if v.kind not in ("input",) and not self.predecessors(v.name):
+                errs.append(f"non-input vertex {v.name!r} has no inputs")
+        if errs:
+            raise ValueError(f"invalid graph {self.name!r}: " + "; ".join(errs))
+
     def first_node(self) -> str:
         """``N_G^in`` — the first node of the graph (unique source expected)."""
         srcs = self.sources()

@@ -28,6 +28,17 @@ _LOG = logging.getLogger(__name__)
 PLAN_SCHEMA_VERSION = 2
 
 
+class PlanValidationError(ValueError):
+    """A structurally invalid :class:`ExecutionPlan`.
+
+    Raised by :meth:`ExecutionPlan.validate` (and therefore by
+    ``from_json`` and the compile façade for manual plans) instead of
+    letting a malformed decision vector reach the lowering, where it
+    would surface as an opaque crash deep inside the pipelined streamer
+    (a backwards stage crossing, for example, would otherwise build a
+    negative-depth shift register)."""
+
+
 def _known_fields(cls) -> set[str]:
     return {f.name for f in dataclasses.fields(cls)}
 
@@ -129,7 +140,48 @@ class ExecutionPlan:
                 "ExecutionPlan.from_json (model=%r, schema v%s): dropped %d "
                 "unknown key(s) written by a newer toolflow: %s",
                 plan.model, orig_version, len(dropped), ", ".join(dropped))
+        plan.validate()
         return plan
+
+    # -- structural validation ------------------------------------------------
+    def validate(self) -> None:
+        """Reject decision vectors the lowering cannot execute.
+
+        Checks the *plan-only* invariants (no graph needed): stage indices
+        live in ``[0, n_stages)``, stage bounds are monotonic along every
+        stream (an edge whose destination sits on an *earlier* stage than
+        its source cannot be scheduled — the pipelined carry would need a
+        negative delay), fragmentation fractions are in ``[0, 1]``, and the
+        microbatch count is positive.  ``from_json`` calls this, so a
+        corrupt or hand-edited artifact fails here with a typed
+        :class:`PlanValidationError` instead of crashing the streamer.
+        """
+        errs: list[str] = []
+        if self.n_stages < 1:
+            errs.append(f"n_stages must be >= 1, got {self.n_stages}")
+        if self.microbatch < 1:
+            errs.append(f"microbatch must be >= 1, got {self.microbatch}")
+        for name, lp in self.layers.items():
+            if not 0 <= lp.stage < max(self.n_stages, 1):
+                errs.append(f"layer {name!r} on stage {lp.stage}, outside "
+                            f"[0, {self.n_stages})")
+            if not 0.0 <= lp.weight_static_fraction <= 1.0:
+                errs.append(f"layer {name!r} weight_static_fraction "
+                            f"{lp.weight_static_fraction} outside [0, 1]")
+            if lp.tp_parallelism < 1:
+                errs.append(f"layer {name!r} tp_parallelism "
+                            f"{lp.tp_parallelism} < 1")
+        for s in self.streams:
+            su, sv = self.layers.get(s.src), self.layers.get(s.dst)
+            if su is not None and sv is not None and sv.stage < su.stage:
+                errs.append(
+                    f"stream {s.src}->{s.dst} crosses stages backwards "
+                    f"({su.stage} -> {sv.stage}): stage bounds must be "
+                    f"monotonic along every edge")
+        if errs:
+            raise PlanValidationError(
+                f"invalid ExecutionPlan for model {self.model!r}: "
+                + "; ".join(errs))
 
     def _order_key(self):
         pos = {n: i for i, n in enumerate(self.topo_order)}

@@ -114,6 +114,29 @@ class ModelCheck:
         shared host is noisy, and the residual's job is attribution."""
         return self.ticks_ok and self.queues_ok
 
+    def violations(self) -> list[str]:
+        """Every failed gated invariant, named — the conformance oracles
+        (``repro.testing.oracle``) attach these to their failure reports so
+        a fuzzed plan that breaks Eq. 1 / the 1F1B tick count says *which*
+        queue or count broke, not just ``ok=False``."""
+        out: list[str] = []
+        if self.ticks_measured is not None:
+            if self.ticks_measured != self.ticks_predicted:
+                out.append(f"ticks: measured {self.ticks_measured} != "
+                           f"predicted B+S-1 = {self.ticks_predicted}")
+            if self.steady_measured != self.steady_predicted:
+                out.append(f"steady ticks: measured {self.steady_measured} "
+                           f"!= predicted B-S+1 = {self.steady_predicted}")
+        for q in self.queues:
+            if q.high_water > q.capacity:
+                out.append(f"queue {q.edge}: high water {q.high_water} "
+                           f"exceeds Eq.1 capacity {q.capacity}")
+            if q.push_stalls or q.pop_stalls:
+                out.append(f"queue {q.edge}: {q.push_stalls} push / "
+                           f"{q.pop_stalls} pop stalls (Eq.1-sized rings "
+                           f"must never stall)")
+        return out
+
     def summary(self) -> dict:
         return {
             "ok": self.ok,

@@ -383,9 +383,25 @@ class LoweredPipeline:
     report: SpillReport
     plan: ExecutionPlan | None
     graph_name: str
+    # oracle entry (repro.testing): un-jitted forward that returns every
+    # vertex's output, for localising where two executors diverge
+    values_fn: Callable[[dict, jax.Array], dict] | None = None
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.fn(self.params, x)
+
+    def run_intermediates(self, x: jax.Array) -> dict[str, jax.Array]:
+        """Every vertex's output for one frame, in topo order.
+
+        The conformance oracles (``repro.testing.oracle``) use this to name
+        the *first* vertex where a plan's numerics leave the reference —
+        far more actionable than "final outputs differ".  Un-jitted: this
+        is a debugging path, not an execution path.
+        """
+        if self.values_fn is None:
+            raise NotImplementedError("this pipeline was lowered without "
+                                      "intermediate capture")
+        return self.values_fn(self.params, x)
 
     def run_traced(self, x: jax.Array, recorder=None) -> jax.Array:
         """Run one frame, recording a ``frame`` span plus spill counters.
@@ -462,7 +478,7 @@ def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
     an = analyze_plan(g, plan, use_pallas=use_pallas, interpret=interpret)
 
     # -- build the traced pipeline -------------------------------------------
-    def forward(params: dict, x: jax.Array) -> jax.Array:
+    def forward_values(params: dict, x: jax.Array) -> dict[str, jax.Array]:
         if tuple(x.shape) != an.in_shape:
             # every op downstream is shape-agnostic on the position axis, so
             # a wrong-m input would execute silently while the SpillReport
@@ -481,11 +497,15 @@ def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
                     val = hop(fn(val))
                 ins.append(val)
             values[name] = apply_vertex(v, ins, params, x, an)
-        return values[an.topo[-1]]
+        return values
+
+    def forward(params: dict, x: jax.Array) -> jax.Array:
+        return forward_values(params, x)[an.topo[-1]]
 
     return LoweredPipeline(fn=jax.jit(forward),
                            params=init_params(g, seed=seed),
-                           report=an.report(), plan=plan, graph_name=g.name)
+                           report=an.report(), plan=plan, graph_name=g.name,
+                           values_fn=forward_values)
 
 
 def reference_pipeline(g: Graph, *, seed: int = 0) -> LoweredPipeline:

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.graph import Graph
-from ...core.plan import ExecutionPlan
+from ...core.plan import ExecutionPlan, PlanValidationError
 from ...kernels.streamed_matmul import _round_up
 from ...obs.modelcheck import ModelCheck, check_stream
 from ...obs.stream import StreamTracer
@@ -143,8 +143,9 @@ def _stage_names(an: PlanAnalysis) -> list[list[str]]:
         names[an.stage_of[v]].append(v)
     for j, ns in enumerate(names):
         if not ns:
-            raise ValueError(f"stage {j} is empty — plan stages must be "
-                             f"contiguous 0..{n - 1}")
+            raise PlanValidationError(
+                f"stage {j} is empty — plan stages must be "
+                f"contiguous 0..{n - 1}")
     return names
 
 
@@ -153,9 +154,10 @@ def _crossing_edges(g: Graph, an: PlanAnalysis) -> list[tuple[str, str]]:
     for e in g.edges():
         d = an.stage_of[e.dst] - an.stage_of[e.src]
         if d < 0:
-            raise ValueError(f"edge {(e.src, e.dst)} goes backwards across "
-                             f"stages ({an.stage_of[e.src]} -> "
-                             f"{an.stage_of[e.dst]})")
+            raise PlanValidationError(
+                f"edge {(e.src, e.dst)} goes backwards across "
+                f"stages ({an.stage_of[e.src]} -> "
+                f"{an.stage_of[e.dst]})")
         if d > 0:
             out.append((e.src, e.dst))
     return out

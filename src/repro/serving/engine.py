@@ -354,7 +354,7 @@ class GraphStreamServer:
 
     def __init__(self, g=None, plan=None, *, microbatches: int = 8,
                  executor=None, spec=None, metrics: MetricsRegistry | None = None,
-                 slo=None, **lower_kw):
+                 slo=None, resident_limit: int = 0, **lower_kw):
         from repro.api import CompileSpec, compile as smof_compile
         if executor is None:
             if spec is None:
@@ -364,6 +364,12 @@ class GraphStreamServer:
             executor = smof_compile(spec).executor
         self.executor = executor
         self.microbatches = executor.microbatches
+        # flushed-but-unclaimed results allowed to stay resident (live
+        # arrays) before the oldest is evicted to the byte-packed host
+        # store; 0 = unbounded.  Restoration is exact — results are
+        # finished outputs, so unlike the KV pages there is nothing to
+        # re-quantise and the eviction must be lossless.
+        self.resident_limit = resident_limit
         # registry-backed accounting (own registry by default; pass one to
         # share a scrape surface, e.g. Compiled.serve threads the artifact's)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -398,9 +404,20 @@ class GraphStreamServer:
             (r.offchip_bits // 8) * 2
             for r in getattr(executor.report, "spills", ())
         ) * self.microbatches
+        self._c_evicted_results = m.counter(
+            "smof_server_evicted_results_total",
+            "flushed results spilled to the host store (resident_limit)")
+        self._c_restored_results = m.counter(
+            "smof_server_restored_results_total",
+            "evicted results restored on claim (exact, byte-packed)")
         self.autotune_result = None          # set by .autotuned()
         self._pending: list[tuple[int, np.ndarray]] = []
-        self._results: dict[int, np.ndarray] = {}
+        # ticket -> output, oldest-flushed first (the eviction order)
+        self._results: "collections.OrderedDict[int, np.ndarray]" = \
+            collections.OrderedDict()
+        # ticket -> (raw bytes, dtype, shape): the off-chip side of the
+        # resident budget — exact restore by construction
+        self._host_results: dict[int, tuple[bytes, np.dtype, tuple]] = {}
         self._submit_ts: dict[int, float] = {}
         self._next_ticket = 0
 
@@ -472,6 +489,14 @@ class GraphStreamServer:
                 verdict = self.slo.evaluate().verdict
                 self._c_slo.labels(verdict=verdict).inc()
         self._results.update(out)
+        if self.resident_limit > 0:
+            while len(self._results) > self.resident_limit:
+                # budget exceeded: spill the OLDEST unclaimed result —
+                # same retirement-order policy as the decode engine's
+                # KV pages, but lossless (finished outputs)
+                ticket, y = self._results.popitem(last=False)
+                self._host_results[ticket] = (y.tobytes(), y.dtype, y.shape)
+                self._c_evicted_results.inc()
         return out
 
     # -- observability surface ------------------------------------------------
@@ -507,5 +532,12 @@ class GraphStreamServer:
 
     def result(self, ticket: int) -> np.ndarray:
         """Claim a flushed output (one-shot: the server does not keep
-        delivered results, so a long-lived front-end stays bounded)."""
+        delivered results, so a long-lived front-end stays bounded).
+
+        Results evicted under ``resident_limit`` restore bit-exactly from
+        the host byte store."""
+        if ticket in self._host_results:
+            raw, dtype, shape = self._host_results.pop(ticket)
+            self._c_restored_results.inc()
+            return np.frombuffer(raw, dtype=dtype).reshape(shape)
         return self._results.pop(ticket)

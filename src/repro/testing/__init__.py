@@ -1,0 +1,36 @@
+"""Differential conformance harness (fuzzing + cross-executor oracles).
+
+SMOF's core claim is that off-chip eviction is *semantics-preserving*: a
+plan that spills deep edges must compute the same function as the fully
+on-chip pipeline, only with different resource/latency trade-offs.  The
+hand-built graphs (UNet/YOLO/X3D) witness that claim on three topologies;
+this package *manufactures* witnesses:
+
+``gen``
+    seeded random executable graphs over the lowerable op vocabulary
+    (conv, dwconv, pool/global-pool, upsample, add/mul skips, SE blocks,
+    concat feature banks) plus random/mutated :class:`ExecutionPlan`\\ s
+    (stage splits, evict/unevict, fragmentation ratios, microbatches).
+``oracle``
+    differential oracles over one (graph, plan) case: reference ==
+    staged == pipelined == served (exact where no BFP8 crossing,
+    spill-bounded where there is), plan/artifact round-trips, ModelCheck
+    and Eq. 1/5/6 invariants on every run.
+``fuzz``
+    the driver — ``python -m repro.testing.fuzz --budget N --seed S`` —
+    which shrinks failing cases (unevict edges, merge stages, drop skip
+    edges/layers) and writes replayable repro JSONs that
+    ``tests/test_conformance.py`` re-executes.
+
+See ``docs/TESTING.md`` for the oracle taxonomy and repro-file format.
+"""
+from .gen import (FuzzCase, GenConfig, mutate_plan, random_case,
+                  random_exec_graph, random_plan)
+from .oracle import (FAULTS, CaseReport, OracleViolation, check_case,
+                     inject_fault)
+
+__all__ = [
+    "FuzzCase", "GenConfig", "random_case", "random_exec_graph",
+    "random_plan", "mutate_plan",
+    "CaseReport", "OracleViolation", "check_case", "inject_fault", "FAULTS",
+]

@@ -231,6 +231,94 @@ def test_plan_unknown_keys_are_collected(n_layers, n_extra):
     assert back.streams == plan.streams
 
 
+@given(st.integers(1, 6), st.integers(1, 5))
+@settings(max_examples=15, deadline=None)
+def test_plan_future_schema_version_roundtrips_clean(n_layers, bump):
+    """A plan written by a *future* toolflow (higher schema_version plus
+    keys this version has never heard of) still loads: the migration is
+    recorded in provenance, the unknown keys are collected, and — the
+    forward-compat contract — re-serialising does NOT reintroduce them,
+    so a second load sees a clean current-version artifact."""
+    import json as _json
+
+    from repro.core.plan import ExecutionPlan, PLAN_SCHEMA_VERSION
+
+    plan = _plan_from_draws(n_layers, [0, 0, 1, 1], [8] * 4, [0] * 4,
+                            [0] * 4, 0)
+    d = _json.loads(plan.to_json())
+    d["schema_version"] = PLAN_SCHEMA_VERSION + bump
+    d["spill_priority"] = [1, 2, 3]                  # "future" plan knob
+    lname = next(iter(d["layers"]))
+    d["layers"][lname]["vector_lanes"] = 8           # "future" layer knob
+    back = ExecutionPlan.from_json(_json.dumps(d))
+    assert back.schema_version == PLAN_SCHEMA_VERSION
+    assert (back.provenance["migrated_from_schema_version"]
+            == PLAN_SCHEMA_VERSION + bump)
+    assert "plan.spill_priority" in back.dropped_keys
+    assert f"layers[{lname}].vector_lanes" in back.dropped_keys
+    s2 = back.to_json()
+    assert "spill_priority" not in s2 and "vector_lanes" not in s2
+    again = ExecutionPlan.from_json(s2)
+    assert again.dropped_keys == ()                  # second load is clean
+    assert again.layers == plan.layers
+
+
+def test_plan_future_schema_keys_are_logged(caplog):
+    """The forward-compat shim is observable: dropping keys logs one
+    warning naming every dropped key."""
+    import json as _json
+    import logging
+
+    from repro.core.plan import ExecutionPlan
+
+    plan = _plan_from_draws(2, [0] * 4, [8] * 4, [0] * 4, [0] * 4, 0)
+    d = _json.loads(plan.to_json())
+    d["from_the_future"] = True
+    with caplog.at_level(logging.WARNING, logger="repro.core.plan"):
+        ExecutionPlan.from_json(_json.dumps(d))
+    assert any("plan.from_the_future" in r.getMessage()
+               for r in caplog.records)
+
+
+def test_from_json_rejects_backwards_stage_crossing():
+    """A plan whose stream runs from a later stage to an earlier one is
+    unschedulable; from_json must fail with the typed validation error,
+    not hand the plan to the lowering to crash on."""
+    import json as _json
+
+    import pytest
+
+    from repro.core.plan import ExecutionPlan, PlanValidationError
+
+    plan = _plan_from_draws(3, [0, 1, 2, 2], [8] * 4, [0] * 4, [0] * 4, 0)
+    d = _json.loads(plan.to_json())
+    d["layers"]["v0"]["stage"] = 2                   # v0 -> v1 now 2 -> ?
+    d["layers"]["v1"]["stage"] = 0                   # ... -> 0: backwards
+    with pytest.raises(PlanValidationError, match="backwards"):
+        ExecutionPlan.from_json(_json.dumps(d))
+
+
+def test_from_json_rejects_malformed_scalars():
+    """Out-of-range stages, fractions and microbatch counts all fail
+    validation with every problem named in one error."""
+    import json as _json
+
+    import pytest
+
+    from repro.core.plan import ExecutionPlan, PlanValidationError
+
+    plan = _plan_from_draws(2, [0] * 4, [8] * 4, [0] * 4, [0] * 4, 0)
+    d = _json.loads(plan.to_json())
+    d["layers"]["v0"]["stage"] = 99
+    d["layers"]["v1"]["weight_static_fraction"] = 1.5
+    d["microbatch"] = 0
+    with pytest.raises(PlanValidationError) as ei:
+        ExecutionPlan.from_json(_json.dumps(d))
+    msg = str(ei.value)
+    assert "v0" in msg and "weight_static_fraction" in msg
+    assert "microbatch" in msg
+
+
 # =============================================================================
 # Streaming telemetry invariants (ISSUE 6) — random plans driven purely
 # through the schedule walk: build_schedule + queue_specs/build_queues +
