@@ -23,6 +23,16 @@ Both land in one artifact with a shared row schema (CSV on stdout via
   fps_eq6         1 / max_j(L_j)   — pipelined-schedule estimate
   rel_err         max relative deviation vs the dense reference
   offchip_kbits   per-frame off-chip spill traffic (Spill/StreamReport)
+  channel_policy  off-chip arbitration policy of the pipelined compile
+                  ("none" when no channel model is attached)
+  fps_contended_eq6
+                  fps_eq6 scaled by the contended-Eq.6 slowdown of the
+                  ``repro.memory`` channel model (== fps_eq6 when the
+                  channel is uncontended or absent; 0 when a stream is
+                  starved outright)
+  prefetch_deadline_misses
+                  weight-prefetch slots that miss their stage-start
+                  deadline under the arbitrated bandwidth
 
 ``L_j`` are per-stage wall-clock latencies measured stage-by-stage
 (``streamer.measured_stage_latencies``) so fps_eq5/fps_eq6 bracket the two
@@ -55,6 +65,7 @@ import numpy as np
 from repro.api import CompileSpec, build_plan, compile as smof_compile
 from repro.core import DSEConfig, EXEC_MODELS
 from repro.core.resources import Device
+from repro.memory import POLICIES, ChannelConfig
 from repro.optim.autotune import AutotuneConfig
 from repro.runtime.streamer import (eq5_sequential_time, eq6_pipeline_time,
                                     measured_stage_latencies)
@@ -83,12 +94,25 @@ CUT_VARIANTS = (("output",), ("pool", "conv"))
 
 ROW_SCHEMA = ("executor", "model", "codecs", "n_stages", "microbatches",
               "fps_executed", "fps_eq5", "fps_eq6", "rel_err",
-              "offchip_kbits", "evicted", "fragged")
+              "offchip_kbits", "evicted", "fragged", "channel_policy",
+              "fps_contended_eq6", "prefetch_deadline_misses")
 
 
 def _row(executor: str, model: str, codecs: tuple, plan, report,
          fps_executed: float, fps_eq5: float, fps_eq6: float,
-         rel_err: float, microbatches: int) -> dict:
+         rel_err: float, microbatches: int, mem=None) -> dict:
+    # contended-Eq.6 estimate: fps_eq6 (measured-latency units) scaled by
+    # the memory model's analytic contention slowdown; a starved stream
+    # (infinite contended cycles) predicts zero throughput
+    fps_cont = fps_eq6
+    misses = 0
+    policy = "none"
+    if mem is not None:
+        policy = mem.config.policy
+        cont = mem.eq6_contended_cycles
+        fps_cont = (fps_eq6 * mem.eq6_cycles / cont
+                    if (cont > 0 and cont != float("inf")) else 0.0)
+        misses = mem.prefetch.deadline_misses
     return {
         "executor": executor,
         "model": model,
@@ -103,6 +127,9 @@ def _row(executor: str, model: str, codecs: tuple, plan, report,
         "evicted": sum(1 for s in plan.streams if s.evicted),
         "fragged": sum(1 for lp in plan.layers.values()
                        if lp.weight_static_fraction < 1.0),
+        "channel_policy": policy,
+        "fps_contended_eq6": fps_cont,
+        "prefetch_deadline_misses": misses,
     }
 
 
@@ -123,7 +150,8 @@ SEED = 0  # all bench inputs derive from PRNGKey(SEED); stamped in the JSON
 
 def run(smoke: bool = False, pipelined: bool = False,
         microbatches: int = 8, json_path: str | None = None,
-        trace_path: str | None = None) -> list[dict]:
+        trace_path: str | None = None,
+        channel: str | None = "weighted-fair") -> list[dict]:
     rows: list[dict] = []
     model_check = None
     np.random.seed(SEED)  # nothing below should draw host randomness, but
@@ -150,11 +178,14 @@ def run(smoke: bool = False, pipelined: bool = False,
             rel = float(jnp.abs(yl - yr).max() / jnp.abs(yr).max())
 
             B = microbatches
-            # same plan, pipelined — no re-search, just a re-lowering
+            # same plan, pipelined — no re-search, just a re-lowering;
+            # the channel model arbitrates the plan's off-chip traffic
             piped = smof_compile(dataclasses.replace(
                 staged.spec, mode="pipelined", strategy="manual-plan",
-                plan=plan, microbatches=B))
+                plan=plan, microbatches=B,
+                channel=(ChannelConfig(policy=channel) if channel else None)))
             sx = piped.executor
+            mem = sx.report.memory
             lat = measured_stage_latencies(sx, x)  # compiles stage fns only
             fps_eq5 = 1.0 / eq5_sequential_time(lat)
             fps_eq6 = 1.0 / eq6_pipeline_time(lat)
@@ -174,7 +205,8 @@ def run(smoke: bool = False, pipelined: bool = False,
                 rel_p = float(np.abs(ys[0] - np.asarray(yr)).max()
                               / np.abs(np.asarray(yr)).max())
                 rows.append(_row("pipelined", name, codecs, plan, sx.report,
-                                 1e6 / us_frame, fps_eq5, fps_eq6, rel_p, B))
+                                 1e6 / us_frame, fps_eq5, fps_eq6, rel_p, B,
+                                 mem=mem))
                 _emit_row(rows[-1], us_frame)
 
                 # --trace: narrate the first multi-stage pipelined config
@@ -276,6 +308,10 @@ def main(argv: list[str] | None = None) -> None:
                     help="with --pipelined: write a Chrome trace (per-tick "
                          "spans + ModelCheck) of the first multi-stage "
                          "config; open in Perfetto / chrome://tracing")
+    ap.add_argument("--channel", default="weighted-fair",
+                    choices=list(POLICIES) + ["none"],
+                    help="off-chip channel arbitration policy for the "
+                         "pipelined compile ('none' disables the model)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.autotune:
@@ -285,7 +321,8 @@ def main(argv: list[str] | None = None) -> None:
         return
     run(smoke=args.smoke, pipelined=args.pipelined,
         microbatches=args.microbatches, json_path=args.json,
-        trace_path=args.trace if args.pipelined else None)
+        trace_path=args.trace if args.pipelined else None,
+        channel=None if args.channel == "none" else args.channel)
 
 
 if __name__ == "__main__":

@@ -33,12 +33,21 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="with --execute: run once traced and write a "
                          "Chrome trace-event JSON (open in Perfetto)")
+    ap.add_argument("--onchip-kbits", type=float, default=None,
+                    help="shrink the device's on-chip memory view to this "
+                         "many kilobits — forces the DSE into eviction/"
+                         "fragmentation, the streaming story the exec "
+                         "models are otherwise too small to trigger")
     args = ap.parse_args()
 
     spec = spec_from_args(
         args, strategy="dse",
         dse=DSEConfig(batch=args.batch, cut_kinds=("conv", "pool"),
                       codecs=("none", "rle"), word_bits=8))
+    if args.onchip_kbits is not None:
+        from repro.core.resources import get_device
+        spec = dataclasses.replace(spec, device=dataclasses.replace(
+            get_device(args.device), onchip_bits=args.onchip_kbits * 1e3))
     g = get_model(args.model)()
     print(f"{args.model}: {g.total_macs() / 1e9:.1f} GMACs, "
           f"{g.total_weight_words() / 1e6:.1f} M params, "
@@ -84,6 +93,28 @@ def main() -> None:
                               jnp.float32)
         y = compiled.run(x)
         print(f"\nexecuted ({compiled.mode}): output shape {tuple(y.shape)}")
+        # --channel attaches the off-chip memory model (docs/MEMORY.md):
+        # show how the arbiter divided the port and whether every weight
+        # prefetch made its stage-start deadline
+        mem = getattr(getattr(compiled.executor, "report", None),
+                      "memory", None)
+        if mem is not None:
+            arb = mem.arbitration
+            print(f"\noff-chip channel ({mem.config.policy}, "
+                  f"{mem.channel.gbps:g} Gbps, "
+                  f"utilization {arb.utilization:.0%}):")
+            print(f"  {'stream':<28} {'kind':<20} {'demand':>9} "
+                  f"{'granted':>9}  ok")
+            for r in mem.stream_table():
+                print(f"  {r['name']:<28} {r['kind']:<20} "
+                      f"{r['demand_gbps']:>7.2f}G {r['granted_gbps']:>7.2f}G"
+                      f"  {'yes' if r['satisfied'] else 'NO'}")
+            misses = mem.prefetch.deadline_misses
+            print(f"  prefetch deadline misses: {misses}"
+                  + (f" {mem.prefetch.misses_by_stage()}" if misses else ""))
+            print(f"  contended Eq.6: {mem.eq6_contended_cycles:g} cycles "
+                  f"(uncontended {mem.eq6_cycles:g}); "
+                  f"stalls/tick {mem.total_stall_cycles:g} cycles")
         if args.trace:
             _, mc = compiled.trace(x, path=args.trace)
             print(f"trace written: {args.trace}")

@@ -7,17 +7,71 @@ eviction at the HBM<->host level).
 
     PYTHONPATH=src python examples/serve_batched.py --arch yi-6b \
         --requests 6 --max-new 12
+
+Passing ``--model`` switches to the streaming-graph serving path instead:
+an ``EXEC_MODELS`` graph is compiled through ``repro.compile`` (the same
+``--channel``/``--channel-gbps`` knobs as quickstart, docs/MEMORY.md) and
+frames are served through ``Compiled.serve``; the summary prints the
+off-chip per-stream bandwidth table and prefetch deadline misses:
+
+    PYTHONPATH=src python examples/serve_batched.py --model unet_exec \
+        --channel weighted-fair --channel-gbps 0.5 --onchip-kbits 300
 """
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import add_compile_args, spec_from_args
 from repro.configs import ARCHS
+from repro.core import EXEC_MODELS
 from repro.models import init_params
 from repro.serving.engine import ServingEngine
+
+
+def serve_graph(args) -> None:
+    """Serve a compiled streaming graph and report the channel split."""
+    import repro
+    from repro.core.resources import get_device
+
+    spec = spec_from_args(args, microbatches=4)
+    if args.onchip_kbits is not None:
+        spec = dataclasses.replace(spec, device=dataclasses.replace(
+            get_device(args.device), onchip_bits=args.onchip_kbits * 1e3))
+    c = repro.compile(spec)
+    srv = c.serve()
+    x = np.zeros(c.input_shape(), np.float32)
+    t0 = time.time()
+    for _ in range(args.requests):
+        srv.submit(x)
+    srv.flush()
+    dt = time.time() - t0
+    st = srv.stats
+    print(f"served {st.frames_out}/{st.frames_in} frames of {args.model} "
+          f"({c.mode}, {args.device}) in {dt:.2f}s "
+          f"({st.frames_out / dt:.1f} fps)")
+
+    mem = getattr(getattr(c.executor, "report", None), "memory", None)
+    if mem is None:
+        print("\nno off-chip channel model attached "
+              "(pass --channel / --channel-gbps, see docs/MEMORY.md)")
+        return
+    arb = mem.arbitration
+    print(f"\noff-chip channel ({mem.config.policy}, "
+          f"{mem.channel.gbps:g} Gbps, utilization {arb.utilization:.0%}):")
+    print(f"  {'stream':<28} {'kind':<20} {'demand':>9} {'granted':>9}  ok")
+    for r in mem.stream_table():
+        print(f"  {r['name']:<28} {r['kind']:<20} "
+              f"{r['demand_gbps']:>7.2f}G {r['granted_gbps']:>7.2f}G"
+              f"  {'yes' if r['satisfied'] else 'NO'}")
+    misses = mem.prefetch.deadline_misses
+    print(f"  prefetch deadline misses: {misses}"
+          + (f" {mem.prefetch.misses_by_stage()}" if misses else ""))
+    print(f"  contended Eq.6: {mem.eq6_contended_cycles:g} cycles "
+          f"(uncontended {mem.eq6_cycles:g})")
 
 
 def main() -> None:
@@ -27,7 +81,18 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--batch-slots", type=int, default=3)
     ap.add_argument("--evict", action="store_true", default=True)
+    # --model flips to the streaming-graph path; brings --device/--mode/
+    # --channel/--channel-gbps along (docs/MEMORY.md)
+    add_compile_args(ap, default_model=None, default_mode="pipelined",
+                     models=EXEC_MODELS, modes=("staged", "pipelined"))
+    ap.add_argument("--onchip-kbits", type=float, default=None,
+                    help="graph path: shrink the on-chip view so the DSE "
+                         "evicts/streams (as in quickstart)")
     args = ap.parse_args()
+
+    if args.model is not None:
+        serve_graph(args)
+        return
 
     cfg = ARCHS[args.arch].reduced()
     print(f"serving {cfg.name} ({cfg.n_layers}L d={cfg.d_model}) "

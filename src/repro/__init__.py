@@ -19,11 +19,14 @@ _API_NAMES = ("CompileSpec", "Compiled", "compile", "build_plan",
 
 # telemetry surface (repro.obs), same lazy resolution
 _OBS_NAMES = ("ObsConfig", "TraceRecorder", "NullRecorder", "ModelCheck",
-              "LatencyHistogram", "validate_chrome_trace",
+              "ContentionCheck", "LatencyHistogram", "validate_chrome_trace",
               "MetricsRegistry", "parse_metrics_text",
               "SloConfig", "SloEvaluator", "FlightRecorder")
 
-__all__ = list(_API_NAMES) + list(_OBS_NAMES)
+# off-chip channel surface (repro.memory), same lazy resolution
+_MEMORY_NAMES = ("ChannelConfig", "MemoryModel")
+
+__all__ = list(_API_NAMES) + list(_OBS_NAMES) + list(_MEMORY_NAMES)
 
 
 def __getattr__(name):
@@ -33,8 +36,12 @@ def __getattr__(name):
     if name in _OBS_NAMES:
         from . import obs
         return getattr(obs, name)
+    if name in _MEMORY_NAMES:
+        from . import memory
+        return getattr(memory, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(set(globals()) | set(_API_NAMES) | set(_OBS_NAMES))
+    return sorted(set(globals()) | set(_API_NAMES) | set(_OBS_NAMES)
+                  | set(_MEMORY_NAMES))

@@ -56,6 +56,7 @@ from .core.dse import DSEConfig, run_dse
 from .core.graph import Graph
 from .core.plan import ExecutionPlan, PLAN_SCHEMA_VERSION, plan_from_dse
 from .core.resources import ALL_DEVICES, Device, get_device
+from .memory import POLICIES, ChannelConfig
 from .obs.metrics import MetricsRegistry
 from .obs.trace import NULL_RECORDER, ObsConfig, TraceRecorder
 
@@ -93,6 +94,10 @@ class CompileSpec:
     interpret: bool | None = None      # Pallas interpret-mode override
     placement: str = "auto"            # pipelined: interleave | shard_map
     obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
+    #: opt-in off-chip channel model (``repro.memory``): arbitration
+    #: policy + optional gbps override; pipelined lowerings then carry the
+    #: contended Eq. 5/6 bounds and prefetch deadline accounting.
+    channel: ChannelConfig | None = None
 
     def resolved_kernel_mode(self) -> str:
         if self.use_pallas is None:
@@ -232,9 +237,14 @@ def compile(spec: CompileSpec) -> "Compiled":
         B = spec.microbatches
         if autotune_result is not None:       # serve at the measured depth
             B = autotune_result.microbatches
+        try:
+            dev = _resolve_device(spec)
+        except (KeyError, ValueError):
+            dev = None
         executor = lower_plan_pipelined(
             g, plan, microbatches=B, kernel_mode=km, seed=spec.seed,
-            interpret=spec.interpret, placement=spec.placement)
+            interpret=spec.interpret, placement=spec.placement,
+            channel=spec.channel, device=dev)
 
     return Compiled(spec=spec, graph=g, device=_device_name(spec, plan),
                     plan=plan, executor=executor,
@@ -472,6 +482,8 @@ class Compiled:
             "seed": self.spec.seed,
             "placement": self.spec.placement,
             "obs": self.spec.obs.to_dict(),
+            "channel": (self.spec.channel.to_dict()
+                        if self.spec.channel is not None else None),
             "graph": self.graph.to_json_dict(),
             "plan": (json.loads(self.plan.to_json())
                      if self.plan is not None else None),
@@ -504,7 +516,9 @@ class Compiled:
             mode=d["mode"], kernel_mode=d["kernel_mode"],
             microbatches=d["microbatches"], seed=d["seed"],
             placement=d.get("placement", "auto"), plan=plan,
-            obs=ObsConfig.from_dict(d.get("obs", {})))
+            obs=ObsConfig.from_dict(d.get("obs", {})),
+            channel=(ChannelConfig.from_dict(d["channel"])
+                     if d.get("channel") else None))
         return compile(spec)
 
 
@@ -534,6 +548,13 @@ def add_compile_args(ap, *, default_model: str | None = "unet_exec",
                     help=f"device registry name (default: {default_device})")
     ap.add_argument("--mode", default=default_mode, choices=list(modes),
                     help=f"execution mode (default: {default_mode})")
+    ap.add_argument("--channel", default=None, choices=list(POLICIES),
+                    help="model the shared off-chip channel with this "
+                         "arbitration policy (default: off)")
+    ap.add_argument("--channel-gbps", default=None, type=float,
+                    help="override the device's off-chip bandwidth for "
+                         "the channel model (implies --channel "
+                         "round-robin when --channel is not given)")
     return ap
 
 
@@ -541,5 +562,10 @@ def spec_from_args(args, **overrides) -> CompileSpec:
     """Build a :class:`CompileSpec` from ``add_compile_args`` output."""
     kw: dict[str, Any] = {"model": args.model, "device": args.device,
                           "mode": args.mode}
+    policy = getattr(args, "channel", None)
+    gbps = getattr(args, "channel_gbps", None)
+    if policy is not None or gbps is not None:
+        kw["channel"] = ChannelConfig(policy=policy or "round-robin",
+                                      gbps=gbps)
     kw.update(overrides)
     return CompileSpec(**kw)

@@ -32,8 +32,8 @@ round-trips through ``Compiled.save/load``.
 from .flight import FlightRecorder
 from .metrics import (REGISTRY, Counter, Gauge, Histogram, MetricsRegistry,
                       escape_label_value, parse_metrics_text)
-from .modelcheck import (ModelCheck, QueueDepthCheck, StageLatencyCheck,
-                         check_stream)
+from .modelcheck import (ContentionCheck, ModelCheck, QueueDepthCheck,
+                         StageLatencyCheck, check_contention, check_stream)
 from .slo import BREACH, PASS, WARN, SloCheck, SloConfig, SloEvaluator, SloReport
 from .stream import StreamTracer, emit_spill_counters
 from .trace import (NULL_RECORDER, LatencyHistogram, NullRecorder, ObsConfig,
@@ -51,7 +51,9 @@ __all__ = [
     "ModelCheck",
     "StageLatencyCheck",
     "QueueDepthCheck",
+    "ContentionCheck",
     "check_stream",
+    "check_contention",
     "Counter",
     "Gauge",
     "Histogram",

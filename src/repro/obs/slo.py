@@ -25,6 +25,14 @@ verdict:
     off-chip spill bandwidth (Gbit/s over the window) as a fraction of
     the device's ``bw_gbps`` (``Device.offchip_gbps``) — riding the DMA
     budget is exactly the regime the paper's Eq. 2 trades against.
+``spill_bw_evict`` / ``spill_bw_restore``
+    the same objective split by direction, each scored against its *own*
+    budget — by default half the device number, or, when the plan was
+    compiled with a channel config, the per-kind effective bandwidth the
+    ``repro.memory`` arbiter actually granted that direction
+    (``stream_budgets``).  The combined ``spill_bw`` check stays for
+    backward compat; the split is what catches one-sided saturation
+    (e.g. a restore-heavy skip connection) that the sum hides.
 
 Objectives without data or targets are skipped, not failed.  A breach
 fires every ``on_breach`` callback with the :class:`SloReport` — the
@@ -114,7 +122,9 @@ class _Sample:
     seconds: float
     stalls: float
     queue_ops: float
-    spill_bytes: float
+    spill_bytes: float        # combined (kept for backward compat)
+    evict_bytes: float
+    restore_bytes: float
 
 
 class SloEvaluator:
@@ -130,16 +140,24 @@ class SloEvaluator:
     latency
         any ``quantile(q) -> seconds`` provider — typically the serving
         engine's :class:`~repro.obs.trace.LatencyHistogram`.
+    stream_budgets
+        per-direction Gbit/s budgets for the split spill objectives,
+        keyed by the arbiter's stream kinds (``activation-evict`` /
+        ``activation-restore``) — e.g.
+        ``MemoryModel.budget_gbps_by_kind()``.  Without them each
+        direction defaults to half of ``bw_gbps``.
     """
 
     def __init__(self, cfg: SloConfig | None = None, *,
                  roofline_fps: float | None = None,
                  bw_gbps: float | None = None,
-                 latency=None) -> None:
+                 latency=None,
+                 stream_budgets: dict[str, float] | None = None) -> None:
         self.cfg = cfg or SloConfig()
         self.roofline_fps = roofline_fps
         self.bw_gbps = bw_gbps
         self.latency = latency
+        self.stream_budgets = dict(stream_budgets or {})
         self.on_breach: list = []         # callbacks: f(report) -> None
         self._samples: collections.deque[_Sample] = collections.deque(
             maxlen=max(self.cfg.window, 1))
@@ -147,14 +165,27 @@ class SloEvaluator:
 
     # -- intake ---------------------------------------------------------------
     def observe(self, *, frames: float, seconds: float, stalls: float = 0.0,
-                queue_ops: float = 0.0, spill_bytes: float = 0.0) -> None:
+                queue_ops: float = 0.0, spill_bytes: float = 0.0,
+                evict_bytes: float | None = None,
+                restore_bytes: float | None = None) -> None:
         """Record one window sample (e.g. one served stream): ``frames``
         delivered over ``seconds`` of wall clock, with the queue/spill
-        traffic that run generated."""
+        traffic that run generated.  ``evict_bytes``/``restore_bytes``
+        split the spill traffic by direction; callers that only know the
+        combined number get an even split (the pipelined spill story moves
+        every evicted bit out once and back once, so halves are exact
+        there)."""
         if seconds < 0 or frames < 0:
             raise ValueError(f"negative observation ({frames=}, {seconds=})")
+        if evict_bytes is None and restore_bytes is None:
+            evict_bytes = restore_bytes = spill_bytes / 2.0
+        else:
+            evict_bytes = evict_bytes or 0.0
+            restore_bytes = restore_bytes or 0.0
+            spill_bytes = max(spill_bytes, evict_bytes + restore_bytes)
         self._samples.append(_Sample(frames, seconds, stalls, queue_ops,
-                                     spill_bytes))
+                                     spill_bytes, evict_bytes,
+                                     restore_bytes))
 
     # -- window aggregates ----------------------------------------------------
     def _window(self) -> dict:
@@ -163,6 +194,12 @@ class SloEvaluator:
         stalls = sum(s.stalls for s in self._samples)
         ops = sum(s.queue_ops for s in self._samples)
         spill_bytes = sum(s.spill_bytes for s in self._samples)
+        evict_bytes = sum(s.evict_bytes for s in self._samples)
+        restore_bytes = sum(s.restore_bytes for s in self._samples)
+
+        def gbps(nbytes: float) -> float:
+            return (nbytes * 8 / 1e9) / seconds if seconds > 0 else 0.0
+
         return {
             "samples": len(self._samples),
             "frames": frames,
@@ -172,8 +209,11 @@ class SloEvaluator:
             "queue_ops": ops,
             "stall_ratio": stalls / ops if ops > 0 else 0.0,
             "spill_bytes": spill_bytes,
-            "spill_gbps": (spill_bytes * 8 / 1e9) / seconds
-                          if seconds > 0 else 0.0,
+            "spill_gbps": gbps(spill_bytes),
+            "evict_bytes": evict_bytes,
+            "evict_gbps": gbps(evict_bytes),
+            "restore_bytes": restore_bytes,
+            "restore_gbps": gbps(restore_bytes),
         }
 
     # -- scoring --------------------------------------------------------------
@@ -238,6 +278,24 @@ class SloEvaluator:
                                    low_is_bad=False),
                 detail=f"{frac:.3f} of the device's "
                        f"{self.bw_gbps:.4g} Gbps off-chip budget"))
+            for name, kind, key in (
+                    ("spill_bw_evict", "activation-evict", "evict_gbps"),
+                    ("spill_bw_restore", "activation-restore",
+                     "restore_gbps")):
+                budget = self.stream_budgets.get(kind, self.bw_gbps / 2.0)
+                if budget <= 0:
+                    continue
+                frac = win[key] / budget
+                src = ("arbiter-granted" if kind in self.stream_budgets
+                       else "half-device")
+                checks.append(SloCheck(
+                    name, measured=win[key],
+                    target=cfg.spill_bw_fraction_breach * budget,
+                    verdict=self._band(frac, cfg.spill_bw_fraction_warn,
+                                       cfg.spill_bw_fraction_breach,
+                                       low_is_bad=False),
+                    detail=f"{frac:.3f} of the {src} "
+                           f"{budget:.4g} Gbps budget"))
 
         report = SloReport(checks=checks, window=win)
         self.last_report = report

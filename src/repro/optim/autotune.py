@@ -48,12 +48,14 @@ from repro.core.graph import Graph
 from repro.core.pipeline import initiation_interval
 from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan, plan_from_dse
 from repro.core.resources import Device
+from repro.memory import ChannelConfig, build_memory_model
 from repro.obs.trace import NULL_RECORDER
-from repro.runtime.executor import WEIGHT_KINDS
+from repro.runtime.executor import WEIGHT_KINDS, analyze_plan
 from repro.runtime.streamer import (StreamingExecutor, eq5_sequential_time,
                                     eq6_pipeline_time,
                                     lower_plan_pipelined,
-                                    measured_stage_latencies, stage_latencies)
+                                    measured_stage_latencies, stage_latencies,
+                                    stage_weight_bits)
 
 MOVES = ("split", "merge", "evict", "unevict", "frag")
 
@@ -81,6 +83,12 @@ class AutotuneConfig:
     warmup: int = 1
     kernel_mode: str = "auto"
     dse: DSEConfig | None = None
+    #: opt-in off-chip channel model: candidates whose aggregate stream
+    #: demand oversubscribes the channel are *pruned* (recorded with
+    #: ``pruned=True``, fps 0, never lowered or measured), and the
+    #: trajectory carries the contended Eq. 6 ranking alongside the
+    #: uncontended one.
+    channel: ChannelConfig | None = None
 
 
 @dataclasses.dataclass
@@ -103,6 +111,12 @@ class CandidateRecord:
     fps_eq6_pre: float = 0.0   # Eq. 6 at nominal frequency (uncalibrated)
     fps_eq6_cal: float = 0.0   # Eq. 6 with the fitted s_per_cycle
     best_so_far: bool = False
+    # channel-model fields (cfg.channel set): contended Eq. 6 frame time,
+    # whether aggregate stream demand fits the channel, and whether the
+    # candidate was pruned before lowering (infeasible -> never measured)
+    eq6_contended_cycles: float = 0.0
+    feasible: bool = True
+    pruned: bool = False
 
     @property
     def bottleneck_stage(self) -> int:
@@ -176,6 +190,8 @@ class AutotuneResult:
             "fps_measured": r.fps_measured, "fps_eq6_pre": r.fps_eq6_pre,
             "fps_eq6_cal": r.fps_eq6_cal,
             "bottleneck_stage": r.bottleneck_stage,
+            "eq6_contended_cycles": r.eq6_contended_cycles,
+            "feasible": r.feasible, "pruned": r.pruned,
         } for r in self.trajectory]
 
     def to_json(self) -> str:
@@ -374,34 +390,65 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
     x = jax.random.normal(jax.random.PRNGKey(cfg.seed), in_shape, jnp.float32)
     xs = jnp.broadcast_to(x, (cfg.microbatches,) + in_shape)
 
-    def evaluate(genome: _Genome, index: int, move: str
+    def channel_view(plan: ExecutionPlan) -> tuple[bool, float]:
+        """(feasible, contended eq6 cycles) under ``cfg.channel`` — from
+        the analytic models only, no lowering, so pruning an infeasible
+        candidate costs a plan analysis instead of a jit trace."""
+        if cfg.channel is None:
+            return True, 0.0
+        an = analyze_plan(g, plan, use_pallas=False, interpret=False)
+        mem = build_memory_model(
+            spills=an.spills,
+            weight_bits_by_stage=stage_weight_bits(g, an),
+            stage_of=an.stage_of,
+            base_latencies=stage_latencies(g, plan),
+            gbps=dev.offchip_gbps, freq_mhz=dev.freq_mhz,
+            config=cfg.channel, microbatches=cfg.microbatches)
+        return mem.arbitration.feasible, mem.eq6_contended_cycles
+
+    def evaluate(genome: _Genome, index: int, move: str, *,
+                 prune: bool = True
                  ) -> tuple[CandidateRecord, ExecutionPlan,
-                            StreamingExecutor]:
+                            StreamingExecutor | None]:
         plan = _plan_from_genome(g, topo, genome, model=g.name,
                                  device=dev.name,
                                  microbatch=cfg.microbatches)
+        feasible, eq6c = channel_view(plan)
+        cyc = stage_latencies(g, plan)               # analytic, cycles
+        rec = CandidateRecord(
+            index=index, move=move, accepted=False,
+            n_stages=plan.n_stages,
+            n_evicted=sum(1 for s in plan.streams if s.evicted),
+            n_fragged=sum(1 for lp in plan.layers.values()
+                          if lp.weight_static_fraction < 1.0),
+            fps_measured=0.0,
+            eq5_cycles=eq5_sequential_time(cyc),
+            eq6_cycles=eq6_pipeline_time(cyc),
+            stage_cycles=list(cyc),
+            eq6_contended_cycles=eq6c, feasible=feasible)
+        if prune and not feasible:
+            rec.pruned = True
+            if recorder.enabled:
+                recorder.instant(f"prune:{move}", track="autotune",
+                                 args={"candidate": index,
+                                       "eq6_contended_cycles": eq6c})
+            return rec, plan, None
         with recorder.span(f"candidate{index}", track="autotune", cat=move,
                            args={"candidate": index, "move": move}) as sa:
             sx = lower_plan_pipelined(g, plan, microbatches=cfg.microbatches,
-                                      kernel_mode=cfg.kernel_mode)
-            fps = measure_fps(sx, xs)
-            cyc = stage_latencies(g, plan)           # analytic, cycles
-            rec = CandidateRecord(
-                index=index, move=move, accepted=False,
-                n_stages=plan.n_stages,
-                n_evicted=sum(1 for s in plan.streams if s.evicted),
-                n_fragged=sum(1 for lp in plan.layers.values()
-                              if lp.weight_static_fraction < 1.0),
-                fps_measured=fps,
-                eq5_cycles=eq5_sequential_time(cyc),
-                eq6_cycles=eq6_pipeline_time(cyc),
-                stage_cycles=list(cyc))
-            sa.update({"fps_measured": fps, "n_stages": rec.n_stages,
+                                      kernel_mode=cfg.kernel_mode,
+                                      channel=cfg.channel, device=dev)
+            rec.fps_measured = measure_fps(sx, xs)
+            sa.update({"fps_measured": rec.fps_measured,
+                       "n_stages": rec.n_stages,
                        "bottleneck_stage": rec.bottleneck_stage})
         return rec, plan, sx
 
     trajectory: list[CandidateRecord] = []
-    rec, plan, sx = evaluate(genome, 0, "seed")
+    # the seed is always measured (prune=False): it anchors the baseline
+    # fps, and an infeasible-but-measured seed is strictly better than no
+    # plan at all — only *moves away* from it get pruned
+    rec, plan, sx = evaluate(genome, 0, "seed", prune=False)
     rec.accepted = rec.best_so_far = True
     rec.stage_seconds = list(measure_stages(sx, x))
     trajectory.append(rec)
@@ -419,6 +466,13 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
             break
         cand, move = prop
         rec, plan, sx = evaluate(cand, i, move)
+        if rec.pruned:
+            # bandwidth-infeasible: recorded, never accepted, never best
+            trajectory.append(rec)
+            if m_cand is not None:
+                m_cand.labels(accepted="false").inc()
+            temp *= cfg.cooling
+            continue
         delta = (rec.fps_measured - cur_fps) / max(cur_fps, 1e-30)
         accept = delta >= 0 or rng.random() < math.exp(delta / max(temp, 1e-9))
         if accept:
@@ -452,8 +506,12 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
     nominal = 1.0 / (dev.freq_mhz * 1e6)
     for r in trajectory:
         r.fps_eq6_pre = 1.0 / (r.eq6_cycles * nominal)
-        if s_per_cycle > 0:
-            r.fps_eq6_cal = 1.0 / (r.eq6_cycles * s_per_cycle)
+        # with a channel model the ranking estimate is the *contended*
+        # Eq. 6 — the channel, not compute, may set the bottleneck
+        eff = (max(r.eq6_contended_cycles, r.eq6_cycles)
+               if cfg.channel is not None else r.eq6_cycles)
+        if s_per_cycle > 0 and math.isfinite(eff) and eff > 0:
+            r.fps_eq6_cal = 1.0 / (eff * s_per_cycle)
 
     t_meas = 1.0 / best_rec.fps_measured
     pre_err = abs(math.log((best_rec.eq6_cycles * nominal) / t_meas))

@@ -58,6 +58,14 @@ Schedule and latency model (``schedule.py``)
         ``calibrated_latency_hook(s_per_cycle)``.
     ``eq5_sequential_time(L)`` / ``eq6_pipeline_time(L)``
         The two frame-time estimators: stage sum vs slowest stage.
+    ``eq5_contended_time(L, X)`` / ``eq6_contended_time(L, X)``
+        The same estimators over the *contended* stage latencies
+        ``max(L_j, X_j)``, with ``X_j`` the per-stage off-chip transfer
+        time from the ``repro.memory`` channel arbiter.  Lowering with a
+        ``channel=ChannelConfig(...)`` attaches the full
+        :class:`~repro.memory.MemoryModel` to ``StreamReport.memory``;
+        ``stage_weight_bits(g, an)`` is the exact per-stage streamed
+        weight volume the model arbitrates.
     ``simulate_schedule(schedule, queues, producer_stage, consumer_stage)``
         Walk the schedule through the bounded rings for the report's
         occupancy/stall statistics.
@@ -75,10 +83,11 @@ Bounded inter-stage queues (``queues.py``)
         counters and stall instants into the trace.
 """
 from .pipeline import (StreamingExecutor, StreamReport, lower_plan_pipelined,
-                       measured_stage_latencies)
+                       measured_stage_latencies, stage_weight_bits)
 from .queues import QueueSpec, RingBuffer, build_queues, queue_specs
 from .schedule import (PipelineSchedule, StageTask, build_schedule,
-                       eq5_sequential_time, eq6_pipeline_time,
+                       eq5_contended_time, eq5_sequential_time,
+                       eq6_contended_time, eq6_pipeline_time,
                        simulate_schedule, stage_latencies)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Callable
 
 import jax
@@ -35,14 +36,16 @@ import jax.numpy as jnp
 
 from ...core.graph import Graph
 from ...core.plan import ExecutionPlan, PlanValidationError
+from ...core.resources import ALL_DEVICES
 from ...kernels.streamed_matmul import _round_up
+from ...memory import ChannelConfig, MemoryModel, build_memory_model
 from ...obs.modelcheck import ModelCheck, check_stream
 from ...obs.stream import StreamTracer
 from ...obs.trace import NULL_RECORDER
-from ..executor import (BFP8_BLOCK, PlanAnalysis, SpillReport,
-                        _make_offchip_hop, analyze_plan, apply_vertex,
-                        bfp8_spill_decode, bfp8_spill_encode, init_params,
-                        resolve_kernel_mode)
+from ..executor import (BFP8_BLOCK, TEMPORAL_KINDS, PlanAnalysis, SpillReport,
+                        _exec_spec, _make_offchip_hop, analyze_plan,
+                        apply_vertex, bfp8_spill_decode, bfp8_spill_encode,
+                        init_params, resolve_kernel_mode)
 from . import queues as Q
 from . import schedule as SCH
 
@@ -70,6 +73,10 @@ class StreamReport(SpillReport):
     stage_stalls: list[int] = dataclasses.field(default_factory=list)
     stage_latency: list[float] = dataclasses.field(default_factory=list)
     queue_stats: dict = dataclasses.field(default_factory=dict)
+    #: the off-chip channel view (``repro.memory``) when the plan was
+    #: lowered with a :class:`~repro.memory.ChannelConfig`; ``None`` keeps
+    #: every contended property degrading to its uncontended twin.
+    memory: MemoryModel | None = None
 
     @property
     def eq5_time(self) -> float:
@@ -86,6 +93,35 @@ class StreamReport(SpillReport):
         return max(range(len(self.stage_latency)),
                    key=lambda j: self.stage_latency[j])
 
+    # -- contended (channel-arbitrated) views --------------------------------
+    @property
+    def stage_latency_contended(self) -> list[float]:
+        """``max(L_j, X_j)`` per stage; ``stage_latency`` without a model."""
+        if self.memory is None:
+            return list(self.stage_latency)
+        return list(self.memory.contended_latencies)
+
+    @property
+    def eq5_contended_time(self) -> float:
+        return SCH.eq5_sequential_time(self.stage_latency_contended)
+
+    @property
+    def eq6_contended_time(self) -> float:
+        return SCH.eq6_pipeline_time(self.stage_latency_contended)
+
+    @property
+    def contention_stall_cycles(self) -> list[float]:
+        """Per-stage channel-stall cycles per frame (empty: no model)."""
+        return [] if self.memory is None else list(self.memory.stall_cycles)
+
+    @property
+    def prefetch_deadline_misses(self) -> int:
+        return 0 if self.memory is None else self.memory.prefetch.deadline_misses
+
+    @property
+    def channel_policy(self) -> str | None:
+        return None if self.memory is None else self.memory.config.policy
+
     def summary(self) -> dict:
         out = super().summary()
         out.update({
@@ -99,6 +135,15 @@ class StreamReport(SpillReport):
             "eq6_time": self.eq6_time,
             "bottleneck_stage": self.bottleneck_stage,
         })
+        if self.memory is not None:
+            out.update({
+                "channel_policy": self.channel_policy,
+                "eq5_contended_time": self.eq5_contended_time,
+                "eq6_contended_time": self.eq6_contended_time,
+                "contention_stall_cycles": self.contention_stall_cycles,
+                "prefetch_deadline_misses": self.prefetch_deadline_misses,
+                "memory": self.memory.summary(),
+            })
         return out
 
 
@@ -299,8 +344,11 @@ class StreamingExecutor:
                              jnp.asarray(0, jnp.int32), xs)
         jax.block_until_ready(warm)
 
+        mem = self.report.memory
+        stalls = mem.stall_cycles if mem is not None else []
         carry = self._carry0()
         ys = []
+        steady_durs: list[float] = []
         for t in range(sched.ticks):
             ts = recorder.now()
             t0 = time.perf_counter()
@@ -311,6 +359,14 @@ class StreamingExecutor:
             dur = time.perf_counter() - t0
             ys.append(y)
             tracer.tick(t, ts=ts, dur=dur)
+            if sched.phase(t) == "steady":
+                steady_durs.append(dur)
+            # narrate where the channel model says compute waits on the
+            # shared port this tick (stall > 0 for an active stage)
+            for j in sched.active_stages(t):
+                if j < len(stalls) and stalls[j] > 0:
+                    recorder.instant(f"contention:stage{j}", ts,
+                                     track=f"stage{j}")
         acct = tracer.finish()
         if metrics is not None:
             self._record_metrics(metrics, acct)
@@ -319,10 +375,15 @@ class StreamingExecutor:
         if measure_stages:
             stage_s = measured_stage_latencies(
                 self, xs[0], repeats=repeats, warmup=warmup)
+        steady_s = None
+        if steady_durs:
+            steady_durs.sort()
+            steady_s = steady_durs[len(steady_durs) // 2]
         mc = check_stream(self.report, stage_seconds=stage_s,
                           queue_stats=acct["queues"],
                           ticks_measured=acct["ticks_run"],
-                          steady_measured=acct["phase_ticks"]["steady"])
+                          steady_measured=acct["phase_ticks"]["steady"],
+                          steady_tick_seconds=steady_s)
         return jnp.stack(ys)[self.n_stages - 1:], mc
 
     def _record_metrics(self, metrics, acct: dict) -> None:
@@ -354,19 +415,83 @@ class StreamingExecutor:
                 edge = f"{r.src}->{r.dst}"
                 spill.labels(edge=edge, direction="evict").inc(nbytes)
                 spill.labels(edge=edge, direction="restore").inc(nbytes)
+        mem = self.report.memory
+        if mem is not None:
+            stall = metrics.counter(
+                "smof_contention_stall_cycles_total",
+                "model cycles compute stalls on the shared off-chip "
+                "channel, by stage", ("stage",))
+            for j, c in enumerate(mem.stall_cycles):
+                # one frame's stall per microbatch the stage processed
+                if c > 0 and math.isfinite(c):
+                    stall.labels(stage=str(j)).inc(c * self.microbatches)
+            misses = mem.prefetch.deadline_misses
+            if misses:
+                metrics.counter(
+                    "smof_prefetch_deadline_misses_total",
+                    "weight prefetch slots that missed their stage-start "
+                    "deadline").inc(misses)
+
+
+def stage_weight_bits(g: Graph, an: PlanAnalysis) -> dict[int, int]:
+    """Streamed weight bits per stage, mirroring ``analyze_plan``'s
+    per-layer rounding exactly so the per-stage sums equal
+    ``streamed_weight_bits`` bit-for-bit (the channel model's byte
+    conservation depends on it)."""
+    out = {j: 0 for j in range(an.n_stages)}
+    for name, f in an.frac.items():
+        v = g.vertex(name)
+        spec = _exec_spec(g, name)
+        if v.kind in TEMPORAL_KINDS:
+            wbits = spec.get("taps", 3) * spec["cout"] * v.weight_bits
+        else:
+            wbits = spec["cin"] * spec["cout"] * v.weight_bits
+        out[an.stage_of[name]] += int(round((1.0 - f) * wbits))
+    return out
+
+
+def _resolve_channel_device(channel: ChannelConfig,
+                            device, plan: ExecutionPlan
+                            ) -> tuple[float, float] | None:
+    """(gbps, freq_mhz) for the channel model, or ``None`` when nothing
+    prices the port.  Resolution order: the config's explicit override,
+    then the ``device`` argument (a registry name or a ``Device``-like
+    object), then the plan's recorded device name."""
+    dev = None
+    if isinstance(device, str):
+        dev = ALL_DEVICES.get(device)
+    elif device is not None:
+        dev = device
+    if dev is None:
+        dev = ALL_DEVICES.get(plan.device)
+    if dev is not None:
+        gbps = channel.gbps if channel.gbps is not None else dev.offchip_gbps
+        return gbps, dev.freq_mhz
+    if channel.gbps is not None:
+        return channel.gbps, 200.0      # Device's default clock
+    return None
 
 
 def lower_plan_pipelined(g: Graph, plan: ExecutionPlan, *,
                          microbatches: int | None = None,
                          kernel_mode: str = "auto", seed: int = 0,
                          interpret: bool | None = None,
-                         placement: str = "auto") -> StreamingExecutor:
+                         placement: str = "auto",
+                         channel: ChannelConfig | None = None,
+                         device=None) -> StreamingExecutor:
     """Lower ``plan`` over ``g`` to a pipelined multi-microbatch executor.
 
     microbatches: length ``B`` of the input stream the jitted step is traced
     for (defaults to ``plan.microbatch``, floored at 1).
     placement: "interleave" (single-device scan), "shard_map" (one stage per
     device), or "auto" (shard_map when ``devices >= stages > 1``).
+    channel: opt-in off-chip channel model (``repro.memory``): the plan's
+    streams are arbitrated over the shared port, queue capacities absorb
+    the arbiter-derived crossing delays, and the report carries the
+    contended Eq. 5/6 bounds plus the prefetch deadline accounting.
+    device: registry name or ``Device`` pricing the channel (defaults to
+    ``plan.device``); without a resolvable device *and* no explicit gbps
+    override the channel model is skipped.
     """
     use_pallas, interpret = resolve_kernel_mode(kernel_mode, interpret)
     B = int(microbatches if microbatches is not None
@@ -510,7 +635,20 @@ def lower_plan_pipelined(g: Graph, plan: ExecutionPlan, *,
 
     # -- report: schedule + bounded-queue accounting --------------------------
     lat = SCH.stage_latencies(g, plan)
-    specs = Q.queue_specs(g, an.stage_of, an.out_shape, codec_of)
+    mem = None
+    if channel is not None:
+        priced = _resolve_channel_device(channel, device, plan)
+        if priced is not None:
+            gbps, freq_mhz = priced
+            mem = build_memory_model(
+                spills=an.spills,
+                weight_bits_by_stage=stage_weight_bits(g, an),
+                stage_of=an.stage_of, base_latencies=lat,
+                gbps=gbps, freq_mhz=freq_mhz, config=channel,
+                microbatches=B)
+    specs = Q.queue_specs(
+        g, an.stage_of, an.out_shape, codec_of,
+        extra_delay=(mem.extra_queue_delay() if mem is not None else None))
     sim = SCH.simulate_schedule(
         sched, Q.build_queues(specs),
         producer_stage={e: an.stage_of[e[0]] for e in specs},
@@ -523,7 +661,8 @@ def lower_plan_pipelined(g: Graph, plan: ExecutionPlan, *,
         stage_occupancy=sim["stage_occupancy"],
         stage_stalls=sim["stage_stalls"], stage_latency=lat,
         queue_stats={f"{u}->{w}": st
-                     for (u, w), st in sim["queues"].items()})
+                     for (u, w), st in sim["queues"].items()},
+        memory=mem)
 
     params = init_params(g, seed=seed)
     jitted_stage_fns = [jax.jit(functools.partial(_stage_call, f))

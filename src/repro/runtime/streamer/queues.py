@@ -150,10 +150,18 @@ class RingBuffer:
 def queue_specs(g: Graph, stage_of: dict[str, int],
                 out_shape: dict[str, tuple[int, int]],
                 codec_of: dict[tuple[str, str], str] | None = None,
-                fifo_depth: float = DMA_FIFO_DEPTH) -> dict[tuple[str, str],
-                                                            QueueSpec]:
-    """One :class:`QueueSpec` per stage-crossing edge of the plan."""
+                fifo_depth: float = DMA_FIFO_DEPTH,
+                extra_delay: dict[tuple[str, str], int] | None = None
+                ) -> dict[tuple[str, str], QueueSpec]:
+    """One :class:`QueueSpec` per stage-crossing edge of the plan.
+
+    ``extra_delay`` adds per-edge in-flight entries on top of the stage
+    distance — the arbiter-derived crossing delay from
+    ``repro.memory.MemoryModel.extra_queue_delay`` (a spill round-trip
+    slower than one tick needs a deeper ring to keep the pipeline fed).
+    """
     codec_of = codec_of or {}
+    extra_delay = extra_delay or {}
     specs: dict[tuple[str, str], QueueSpec] = {}
     for e in g.edges():
         d = stage_of[e.dst] - stage_of[e.src]
@@ -161,7 +169,8 @@ def queue_specs(g: Graph, stage_of: dict[str, int],
             continue
         m, c = out_shape[e.src]
         d_b_prime = 2.0 * fifo_depth                      # Eq. 1
-        cap = max(2, d, math.floor(d_b_prime / max(m * c, 1)))
+        cap = max(2, d + extra_delay.get((e.src, e.dst), 0),
+                  math.floor(d_b_prime / max(m * c, 1)))
         specs[(e.src, e.dst)] = QueueSpec(
             src=e.src, dst=e.dst, words_per_entry=m * c,
             word_bits=e.word_bits, codec=codec_of.get((e.src, e.dst), "none"),

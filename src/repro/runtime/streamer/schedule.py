@@ -142,6 +142,26 @@ def eq6_pipeline_time(latencies: Sequence[float]) -> float:
     return float(max(latencies))
 
 
+def eq5_contended_time(latencies: Sequence[float],
+                       transfer: Sequence[float]) -> float:
+    """Eq. 5 over the contended stage latencies ``max(L_j, X_j)``, where
+    ``X_j`` is stage ``j``'s off-chip transfer time from the channel
+    arbiter (``repro.memory``).  >= the uncontended Eq. 5, always."""
+    from ...memory import contended_stage_latencies
+    return eq5_sequential_time(
+        contended_stage_latencies(list(latencies), list(transfer)))
+
+
+def eq6_contended_time(latencies: Sequence[float],
+                       transfer: Sequence[float]) -> float:
+    """Eq. 6 over the contended stage latencies — the steady-state frame
+    time when the shared off-chip channel, not compute, may set the
+    bottleneck.  >= the uncontended Eq. 6, always."""
+    from ...memory import contended_stage_latencies
+    return eq6_pipeline_time(
+        contended_stage_latencies(list(latencies), list(transfer)))
+
+
 def simulate_schedule(schedule: PipelineSchedule,
                       queues: dict[tuple[str, str], "RingBuffer"],
                       producer_stage: dict[tuple[str, str], int],

@@ -399,11 +399,15 @@ class GraphStreamServer:
         self.flight = None                   # obs.flight.FlightRecorder | None
         # per stream executed, every spill record moves offchip_bits once
         # per microbatch in each direction (evict + restore) — the window
-        # sample the SLO's spill-bandwidth objective scores
-        self._spill_bytes_per_stream = sum(
-            (r.offchip_bits // 8) * 2
+        # samples the SLO's spill-bandwidth objectives score, split by
+        # direction so one-sided saturation stays visible
+        _one_way = sum(
+            r.offchip_bits // 8
             for r in getattr(executor.report, "spills", ())
         ) * self.microbatches
+        self._evict_bytes_per_stream = _one_way
+        self._restore_bytes_per_stream = _one_way
+        self._spill_bytes_per_stream = _one_way * 2
         self._c_evicted_results = m.counter(
             "smof_server_evicted_results_total",
             "flushed results spilled to the host store (resident_limit)")
@@ -485,7 +489,9 @@ class GraphStreamServer:
                     self.latency.record(now - t0)
             if self.slo is not None:
                 self.slo.observe(frames=len(chunk), seconds=run_s,
-                                 spill_bytes=self._spill_bytes_per_stream)
+                                 spill_bytes=self._spill_bytes_per_stream,
+                                 evict_bytes=self._evict_bytes_per_stream,
+                                 restore_bytes=self._restore_bytes_per_stream)
                 verdict = self.slo.evaluate().verdict
                 self._c_slo.labels(verdict=verdict).inc()
         self._results.update(out)
@@ -515,19 +521,29 @@ class GraphStreamServer:
             return 1.0 / (eq6 * spc)
         return None
 
-    def enable_slo(self, cfg=None, *, roofline_fps=None, bw_gbps=None):
+    def enable_slo(self, cfg=None, *, roofline_fps=None, bw_gbps=None,
+                   stream_budgets=None):
         """Attach a rolling-window SLO evaluator, re-scored on every flush.
 
         ``roofline_fps`` defaults to :meth:`roofline_fps` (calibrated
         plans only); ``bw_gbps`` is the device's off-chip budget for the
-        spill-bandwidth objective.  Returns the evaluator so callers can
-        hook ``on_breach`` (e.g. ``FlightRecorder.on_slo_report``).
+        spill-bandwidth objective.  ``stream_budgets`` (per-kind Gbps,
+        e.g. ``MemoryModel.budget_gbps_by_kind()``) scores the split
+        evict/restore objectives against the arbiter's grants; defaults
+        to the executor report's channel model when the plan was compiled
+        with one.  Returns the evaluator so callers can hook
+        ``on_breach`` (e.g. ``FlightRecorder.on_slo_report``).
         """
         from repro.obs.slo import SloEvaluator
         if roofline_fps is None:
             roofline_fps = self.roofline_fps()
+        if stream_budgets is None:
+            mem = getattr(self.executor.report, "memory", None)
+            if mem is not None:
+                stream_budgets = mem.budget_gbps_by_kind()
         self.slo = SloEvaluator(cfg, roofline_fps=roofline_fps,
-                                bw_gbps=bw_gbps, latency=self.latency)
+                                bw_gbps=bw_gbps, latency=self.latency,
+                                stream_budgets=stream_budgets)
         return self.slo
 
     def result(self, ticket: int) -> np.ndarray:

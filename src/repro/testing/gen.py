@@ -21,6 +21,7 @@ import random
 from ..core.builders import _XB, exec_input_shape
 from ..core.graph import WEIGHTY, Graph
 from ..core.plan import ExecutionPlan, LayerPlan, StreamPlan
+from ..memory import POLICIES, ChannelConfig
 
 __all__ = ["GenConfig", "FuzzCase", "random_exec_graph", "random_plan",
            "mutate_plan", "random_case", "case_to_json_dict",
@@ -50,6 +51,14 @@ class GenConfig:
     min_microbatches: int = 2
     max_microbatches: int = 5
     max_mutations: int = 2
+    # off-chip channel model draws (repro.memory): probability a case gets
+    # a ChannelConfig at all, then policy/bandwidth/weight vocabularies.
+    # The gbps menu deliberately includes starvation-grade bandwidths
+    # (0.5/1.0) so oversubscribed channels appear within a smoke budget.
+    p_channel: float = 0.5
+    channel_policies: tuple[str, ...] = POLICIES
+    channel_gbps: tuple[float, ...] = (0.5, 1.0, 8.0, 64.0)
+    channel_weights: tuple[float, ...] = (0.5, 1.0, 2.0)
 
 
 # -----------------------------------------------------------------------------
@@ -261,12 +270,14 @@ def mutate_plan(g: Graph, plan: ExecutionPlan, rng: random.Random,
 
 @dataclasses.dataclass
 class FuzzCase:
-    """One conformance case: a graph, a plan for it, and the seed that
-    derives its weights and input frames."""
+    """One conformance case: a graph, a plan for it, the seed that
+    derives its weights and input frames, and (optionally) an off-chip
+    channel model the pipelined compile arbitrates under."""
     graph: Graph
     plan: ExecutionPlan
     seed: int
     label: str = "case"
+    channel: ChannelConfig | None = None
 
     @property
     def input_shape(self) -> tuple[int, int]:
@@ -282,8 +293,19 @@ def random_case(seed: int, index: int,
     plan = random_plan(g, rng, cfg)
     for _ in range(rng.randint(0, cfg.max_mutations)):
         plan = mutate_plan(g, plan, rng, cfg)
+    # channel draw LAST: earlier draws are byte-identical to the
+    # pre-channel generator, so old (seed, index) pairs still name the
+    # same graph+plan and committed repro shrinks stay valid.
+    channel = None
+    if rng.random() < cfg.p_channel:
+        channel = ChannelConfig(
+            policy=rng.choice(list(cfg.channel_policies)),
+            gbps=rng.choice(list(cfg.channel_gbps)),
+            weight_fetch_weight=rng.choice(list(cfg.channel_weights)),
+            evict_weight=rng.choice(list(cfg.channel_weights)),
+            restore_weight=rng.choice(list(cfg.channel_weights)))
     return FuzzCase(graph=g, plan=plan, seed=seed * 1000 + index,
-                    label=f"{seed}-{index}")
+                    label=f"{seed}-{index}", channel=channel)
 
 
 def case_to_json_dict(case: FuzzCase) -> dict:
@@ -292,6 +314,8 @@ def case_to_json_dict(case: FuzzCase) -> dict:
         "plan": json.loads(case.plan.to_json()),
         "seed": case.seed,
         "label": case.label,
+        "channel": (case.channel.to_dict()
+                    if case.channel is not None else None),
     }
 
 
@@ -301,4 +325,7 @@ def case_from_json_dict(d: dict) -> FuzzCase:
         plan=ExecutionPlan.from_json(json.dumps(d["plan"])),
         seed=int(d["seed"]),
         label=d.get("label", "case"),
+        # pre-channel repro payloads have no "channel" key -> None
+        channel=(ChannelConfig.from_dict(d["channel"])
+                 if d.get("channel") else None),
     )

@@ -31,6 +31,12 @@ four executors that stream it differently —
                         the walk matched ``T = B + S - 1`` / Eq. 6 steady
                         ticks and no Eq. 1-sized queue stalled or
                         overflowed.
+``channel_model``       (cases with a drawn ``ChannelConfig``) the
+                        ``repro.memory`` arbitration obeys its own model:
+                        contended stage latencies dominate the base ones,
+                        grants respect demands and channel capacity, and
+                        per-kind arbitrated byte volumes equal the stream
+                        report's spill/weight accounting bit-exactly.
 ``serve_vs_run``        the server returns bit-exact results per ticket,
                         including across a padded partial batch and (with
                         ``resident_limit``) after spilling results to the
@@ -151,7 +157,7 @@ def check_case(case: FuzzCase, *, resident_limit: int = 2,
                                                **base))
     c_pipe = repro.compile(repro.CompileSpec(
         mode="pipelined", plan=plan, microbatches=B,
-        placement="interleave", **base))
+        placement="interleave", channel=case.channel, **base))
 
     m, c = case.input_shape
     rng = np.random.default_rng(case.seed)
@@ -169,7 +175,7 @@ def check_case(case: FuzzCase, *, resident_limit: int = 2,
             mode="staged", plan=twin, **base))
         c_tw_pipe = repro.compile(repro.CompileSpec(
             mode="pipelined", plan=twin, microbatches=B,
-            placement="interleave", **base))
+            placement="interleave", channel=case.channel, **base))
         tw_staged_ys = [np.asarray(c_tw_staged.run(xs[b])) for b in range(B)]
         tw_pipe_ys = np.asarray(c_tw_pipe.run(xs))
     else:
@@ -234,6 +240,32 @@ def check_case(case: FuzzCase, *, resident_limit: int = 2,
     if bad:
         raise OracleViolation("modelcheck", "; ".join(bad))
     ran.append("modelcheck")
+
+    # -- channel_model -------------------------------------------------------
+    # model-domain invariants of the off-chip channel arbitration (no
+    # measured-time claims: those are platform noise): contended stage
+    # latencies dominate the base ones, grants never exceed demands or the
+    # channel's capacity, and the per-kind arbitrated byte volumes equal
+    # the spill/weight accounting of the stream report bit-exactly.
+    if case.channel is not None:
+        from ..obs.modelcheck import check_contention
+        srep_pipe = c_pipe.executor.report
+        if srep_pipe.memory is None:
+            raise OracleViolation(
+                "channel_model",
+                "case has a ChannelConfig but the pipelined compile "
+                "attached no MemoryModel to its StreamReport")
+        cc = check_contention(srep_pipe)
+        bad = cc.violations()
+        if bad:
+            raise OracleViolation("channel_model", "; ".join(bad))
+        if cc.eq6_contended_cycles < cc.eq6_cycles - 1e-9:
+            raise OracleViolation(
+                "channel_model",
+                f"contended Eq.6 ({cc.eq6_contended_cycles}) below "
+                f"uncontended Eq.6 ({cc.eq6_cycles}): contention can only "
+                "slow a stage down")
+        ran.append("channel_model")
 
     # -- serve_vs_run --------------------------------------------------------
     srv = c_pipe.serve(resident_limit=resident_limit)
@@ -313,7 +345,7 @@ def check_case(case: FuzzCase, *, resident_limit: int = 2,
 # fault injection (harness self-test)
 # -----------------------------------------------------------------------------
 
-FAULTS = ("skip-bfp8-decode", "undersize-queues")
+FAULTS = ("skip-bfp8-decode", "undersize-queues", "oversubscribe-channel")
 
 
 @contextlib.contextmanager
@@ -329,6 +361,11 @@ def inject_fault(name: str | None):
         every inter-stage ring is sized to capacity 1, ignoring Eq. 1 —
         any crossing with pipeline delay > 1 then stalls or overflows and
         ``modelcheck`` must fire.
+    ``oversubscribe-channel``
+        the bandwidth arbiter grants every stream its full demand,
+        ignoring the channel's capacity cap — on any case whose drawn
+        channel is oversubscribed, total grants exceed ``bits_per_cycle``
+        and ``modelcheck``/``channel_model`` must fire.
 
     Used by the fuzz driver's ``--inject-fault`` flag and the harness
     self-tests: a conformance suite that cannot catch a planted bug is
@@ -357,6 +394,17 @@ def inject_fault(name: str | None):
             yield
         finally:
             _q.queue_specs = orig
+    elif name == "oversubscribe-channel":
+        from ..memory import arbiter as _arb
+        orig = _arb._grant
+
+        def uncapped(policy, demands, weights, order, capacity):
+            return list(demands)        # every stream gets its demand
+        _arb._grant = uncapped
+        try:
+            yield
+        finally:
+            _arb._grant = orig
     else:
         raise ValueError(f"unknown fault {name!r}; known: {FAULTS}")
 

@@ -61,6 +61,16 @@ class _Floats(_Strategy):
         return float(rng.uniform(self.lo, self.hi))
 
 
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def draw(self, rng, minimal):
+        if minimal:
+            return self.elements[0]
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
 class _Lists(_Strategy):
     def __init__(self, elem: _Strategy, min_size: int, max_size: int):
         self.elem = elem
@@ -92,6 +102,10 @@ class strategies:
     def lists(elements: _Strategy, min_size: int = 0, max_size: int = 50,
               unique: bool = False):
         return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
 
 
 def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,

@@ -39,13 +39,20 @@ SMALL = GenConfig(min_blocks=2, max_blocks=4, positions=(8, 16),
 @pytest.mark.parametrize("path", REPRO_FILES, ids=lambda p: p.stem)
 def test_committed_repros_replay_clean(path):
     """Every committed repro re-executes its exact (graph, plan, seed)
-    case through all oracles.  A repro is committed once its bug is
-    fixed; this test is the regression lock that keeps it fixed."""
-    report = replay(path)          # raises OracleViolation on regression
-    assert report.oracles          # all oracles ran
+    case through all oracles.  A bug repro is committed once its bug is
+    fixed and must replay clean; a *planted-fault* repro (``inject_fault``
+    set) replays with the fault re-injected and must keep failing on the
+    same oracle — the lock that the harness still catches it."""
     d = json.loads(path.read_text())
     assert d["kind"] == "smof-fuzz-repro"
     assert d["oracle"]             # records what originally failed
+    if d.get("inject_fault"):
+        with pytest.raises(OracleViolation) as exc:
+            replay(path)
+        assert exc.value.oracle == d["oracle"]
+    else:
+        report = replay(path)      # raises OracleViolation on regression
+        assert report.oracles      # all oracles ran
 
 
 def test_repro_files_are_valid_format():
@@ -202,4 +209,18 @@ def test_undersized_queue_fault_trips_modelcheck():
     case = random_case(0, 9, SMALL)
     v = run_case(case, "undersize-queues")
     assert v is not None and v.oracle == "modelcheck"
+    assert run_case(case, None) is None    # same case is clean unfaulted
+
+
+def test_oversubscribed_channel_fault_trips_contention_gate():
+    """The channel-capacity gate is live: granting every stream its full
+    demand (ignoring ``bits_per_cycle``) must trip the contention check
+    on a case whose drawn channel is genuinely oversubscribed.
+    (Calibrated: seed 0 index 1 of the default population draws a 1 Gbps
+    fixed-priority channel over an off-chip demand that exceeds it.)"""
+    case = random_case(0, 1, GenConfig())
+    assert case.channel is not None        # the draw this test relies on
+    v = run_case(case, "oversubscribe-channel")
+    assert v is not None and v.oracle in ("modelcheck", "channel_model")
+    assert "capacity" in str(v)
     assert run_case(case, None) is None    # same case is clean unfaulted

@@ -1,0 +1,227 @@
+"""Off-chip memory channel subsystem tests (ISSUE 9: ``repro.memory``).
+
+Three layers:
+
+* unit — burst quantisation, ``ChannelConfig`` round-trip, and the
+  weight prefetcher's deadline math under a stub tick clock;
+* integration — every executable paper model compiled pipelined under a
+  channel model satisfies the contention check's ordering chain
+  (measured steady tick >= contended Eq. 6 >= uncontended Eq. 6, as
+  *times*; equivalently fps measured <= contended <= uncontended) with
+  per-kind arbitrated bytes conserved bit-exactly against the stream
+  report's spill/weight accounting;
+* search — the autotuner's bandwidth-infeasibility pruning never lets an
+  oversubscribed candidate win, and the winner's measured fps never
+  drops below the seed baseline.
+"""
+import math
+
+import pytest
+
+from repro.core import DSEConfig, EXEC_MODELS
+from repro.core.resources import Device
+from repro.memory import (ChannelConfig, MemoryModel, OffChipChannel,
+                          PrefetchReport, prefetch_schedule)
+
+# the benchmarks' memory-starved streaming device: small enough that the
+# exec graphs are forced into eviction + fragmentation, so the channel
+# actually has streams to arbitrate
+TINY_STREAM = Device("tiny_stream", compute_units=4096,
+                     onchip_bits=300_000, offchip_gbps=64.0,
+                     freq_mhz=500.0, reconfig_s=0.0)
+
+STUB_S_PER_CYCLE = 7e-9
+
+
+# -----------------------------------------------------------------------------
+# unit: channel + config
+# -----------------------------------------------------------------------------
+
+class TestChannel:
+    def test_burst_quantisation_rounds_up_whole_bursts(self):
+        ch = OffChipChannel(64.0, freq_mhz=500.0)   # 128 bits/cycle
+        assert ch.bits_per_cycle == pytest.approx(128.0)
+        burst = ch.burst_bits                       # DMA_FIFO_DEPTH words
+        assert ch.n_bursts(0) == 0
+        assert ch.n_bursts(1) == 1
+        assert ch.n_bursts(burst) == 1
+        assert ch.n_bursts(burst + 1) == 2
+        assert ch.quantized_bits(burst + 1) == 2 * burst
+
+    def test_transfer_cycles_inverse_in_rate_and_starved_is_inf(self):
+        ch = OffChipChannel(64.0, freq_mhz=500.0)
+        bits = 3 * ch.burst_bits
+        assert ch.transfer_cycles(bits, 2.0) == \
+            pytest.approx(ch.transfer_cycles(bits, 4.0) * 2.0)
+        assert ch.transfer_cycles(bits, 0.0) == math.inf
+        assert ch.transfer_cycles(0, 0.0) == 0.0    # nothing to move
+
+    def test_config_round_trip_and_validation(self):
+        cfg = ChannelConfig(policy="weighted-fair", gbps=8.0,
+                            evict_weight=0.5, restore_weight=2.0)
+        assert ChannelConfig.from_dict(cfg.to_dict()) == cfg
+        # unknown keys are ignored (forward-compat artifacts)
+        assert ChannelConfig.from_dict(
+            {**cfg.to_dict(), "novel": 1}) == cfg
+        with pytest.raises(ValueError):
+            ChannelConfig(policy="fifo")
+        with pytest.raises(ValueError):
+            ChannelConfig(evict_weight=-1.0)
+
+
+# -----------------------------------------------------------------------------
+# unit: prefetcher deadline math (stub tick clock)
+# -----------------------------------------------------------------------------
+
+class TestPrefetch:
+    CH = OffChipChannel(64.0, freq_mhz=500.0)
+
+    def _sched(self, rates, tick=1000.0, microbatches=3):
+        bits = {j: 4 * self.CH.burst_bits for j in rates}
+        return prefetch_schedule(bits, rates, tick_cycles=tick,
+                                 microbatches=microbatches, channel=self.CH)
+
+    def test_warmup_slot_gets_cumulative_budget(self):
+        rep = self._sched({0: 1.0, 2: 1.0}, tick=1000.0)
+        by = {(s.stage, s.microbatch): s for s in rep.slots}
+        # b=0 of stage j may prefetch during the whole fill ramp:
+        # budget (j+1) ticks, deadline = first tick stage j runs (= j)
+        assert by[(0, 0)].budget_cycles == pytest.approx(1000.0)
+        assert by[(2, 0)].budget_cycles == pytest.approx(3000.0)
+        assert by[(2, 0)].deadline_tick == 2
+        # steady slots get exactly one tick
+        assert by[(2, 1)].budget_cycles == pytest.approx(1000.0)
+        assert by[(2, 1)].start_tick == 2 and by[(2, 1)].deadline_tick == 3
+
+    def test_miss_iff_transfer_exceeds_budget(self):
+        bits = 4 * self.CH.burst_bits               # transfer = bits/rate
+        fast = bits / 999.0                         # fits in one tick
+        slow = bits / 1001.0                        # misses steady budget
+        ok = self._sched({0: fast}, tick=1000.0)
+        assert ok.deadline_misses == 0
+        assert min(s.slack_cycles for s in ok.slots) >= 0.0
+        bad = self._sched({0: slow}, tick=1000.0)
+        # every slot of stage 0 (incl. warmup b=0, whose budget is also
+        # one tick at stage 0) misses by the same margin
+        assert bad.deadline_misses == len(bad.slots)
+        assert bad.misses_by_stage() == {0: len(bad.slots)}
+
+    def test_starved_stage_misses_every_slot(self):
+        rep = self._sched({0: 1.0, 1: 0.0}, tick=10_000.0, microbatches=2)
+        assert all(s.missed for s in rep.slots if s.stage == 1)
+        assert not any(s.missed for s in rep.slots if s.stage == 0)
+        s = rep.summary()
+        assert s["deadline_misses"] == rep.deadline_misses
+        assert isinstance(rep, PrefetchReport)
+
+
+# -----------------------------------------------------------------------------
+# integration: every paper model under a channel model
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", sorted(EXEC_MODELS))
+@pytest.mark.parametrize("policy", ("round-robin", "weighted-fair"))
+def test_contention_check_holds_for_exec_models(model, policy):
+    """The ISSUE 9 acceptance chain on every executable paper topology:
+    the stub-measured steady tick (contended Eq.6 scaled by k >= 1) sits
+    above the contended bound, which sits above the uncontended bound —
+    i.e. fps_measured <= fps_contended <= fps_uncontended — and every
+    arbitrated byte is conserved bit-exactly vs the stream report."""
+    import repro
+    from repro.obs import check_contention
+
+    c = repro.compile(repro.CompileSpec(
+        model=model, device=TINY_STREAM, strategy="dse", mode="pipelined",
+        microbatches=4, kernel_mode="reference",
+        channel=ChannelConfig(policy=policy),
+        dse=DSEConfig(batch=1, codecs=("none", "bfp8"), word_bits=16,
+                      cut_kinds=("pool", "conv"))))
+    rep = c.executor.report
+    mem = rep.memory
+    assert isinstance(mem, MemoryModel)
+    assert mem.config.policy == policy
+
+    # stub measurement: a real machine can only be slower than the model
+    steady = mem.eq6_contended_cycles * STUB_S_PER_CYCLE * 1.5
+    cc = check_contention(rep, s_per_cycle=STUB_S_PER_CYCLE,
+                          steady_tick_seconds=steady)
+    assert cc is not None and cc.ok, cc.violations()
+    assert cc.bits_conserved
+    # the fps chain, stated as times
+    assert cc.eq6_contended_seconds >= cc.eq6_seconds - 1e-12
+    assert cc.measured_within_bounds is True
+    assert cc.summary()["ok"] is True
+
+    # byte conservation is bit-exact against the stream report
+    spill_bits = sum(int(r.offchip_bits) for r in rep.spills)
+    by_kind = mem.arbitration.bits_by_kind()
+    assert by_kind.get("activation-evict", 0) == spill_bits
+    assert by_kind.get("activation-restore", 0) == spill_bits
+    assert by_kind.get("weight-fetch", 0) == int(rep.streamed_weight_bits)
+
+    # the report summary carries the channel block and stays JSON-able
+    import json
+    s = rep.summary()
+    assert s["channel_policy"] == policy
+    json.dumps(s)
+
+
+def test_stream_report_without_channel_has_no_memory_model():
+    import repro
+
+    c = repro.compile(repro.CompileSpec(
+        model="unet_exec", device=TINY_STREAM, strategy="dse",
+        mode="pipelined", microbatches=4, kernel_mode="reference"))
+    rep = c.executor.report
+    assert rep.memory is None
+    assert rep.channel_policy is None
+    # contended estimators degrade to the uncontended ones
+    assert rep.eq6_contended_time == rep.eq6_time
+    from repro.obs import check_contention
+    assert check_contention(rep) is None
+
+
+# -----------------------------------------------------------------------------
+# search: autotune bandwidth pruning
+# -----------------------------------------------------------------------------
+
+def _stub_fps(sx, xs):
+    return 1.0 / (max(sx.report.stage_latency) * STUB_S_PER_CYCLE)
+
+
+def _stub_stages(sx, x):
+    return [l * STUB_S_PER_CYCLE for l in sx.report.stage_latency]
+
+
+class TestAutotunePruning:
+    def _tune(self, channel, n=4):
+        from repro.core import build_unet_exec
+        from repro.optim.autotune import AutotuneConfig, autotune
+        cfg = AutotuneConfig(n_candidates=n, microbatches=4,
+                             kernel_mode="reference", seed=0,
+                             channel=channel)
+        return autotune(build_unet_exec(), TINY_STREAM, cfg,
+                        measure_fps=_stub_fps, measure_stages=_stub_stages)
+
+    def test_generous_channel_keeps_candidates_feasible(self):
+        res = self._tune(ChannelConfig(policy="weighted-fair", gbps=2000.0))
+        assert all(r.feasible and not r.pruned for r in res.trajectory)
+        assert all(r.eq6_contended_cycles >= r.eq6_cycles - 1e-9
+                   for r in res.trajectory)
+        assert res.best_fps >= res.baseline_fps
+
+    def test_scarce_channel_prunes_everything_but_the_seed(self):
+        res = self._tune(ChannelConfig(policy="round-robin", gbps=0.001))
+        seed, rest = res.trajectory[0], res.trajectory[1:]
+        assert seed.move == "seed" and not seed.pruned  # baseline anchor
+        assert rest and all(r.pruned and r.fps_measured == 0.0
+                            for r in rest)
+        # a pruned candidate is never accepted, never best
+        assert not any(r.accepted for r in rest)
+        assert res.best_fps == res.baseline_fps
+
+    def test_trajectory_rows_carry_channel_columns(self):
+        res = self._tune(ChannelConfig(policy="weighted-fair", gbps=2000.0),
+                         n=3)
+        for row in res.trajectory_rows():
+            assert {"eq6_contended_cycles", "feasible", "pruned"} <= set(row)

@@ -475,3 +475,82 @@ def test_latency_histogram_quantile_monotone_and_bounded(values, qs):
     s = h.summary()
     assert s["min_s"] == lo and s["max_s"] == hi
     assert s["p50_s"] <= s["p95_s"] <= s["p99_s"] <= hi
+
+
+# -----------------------------------------------------------------------------
+# off-chip channel arbitration (ISSUE 9: repro.memory)
+# -----------------------------------------------------------------------------
+
+def _arbitrate(policy, bits, weights=None, gbps=8.0, tick=1024.0):
+    """One allocation round over len(bits) eviction streams."""
+    from repro.memory import ChannelArbiter, ChannelConfig, OffChipChannel
+    ch = OffChipChannel(gbps, freq_mhz=250.0)
+    kw = {}
+    if weights is not None:
+        kw = dict(evict_weight=weights[0], restore_weight=weights[1],
+                  weight_fetch_weight=weights[2])
+    arb = ChannelArbiter(ch, ChannelConfig(policy=policy, **kw))
+    kinds = ("activation-evict", "activation-restore", "weight-fetch")
+    for i, b in enumerate(bits):
+        arb.register(f"s{i}", kinds[i % 3], stage=i % 4, bits_per_frame=b)
+    return arb.allocate(tick)
+
+
+@given(st.sampled_from(("round-robin", "fixed-priority", "weighted-fair")),
+       st.lists(st.integers(0, 5_000_000), min_size=1, max_size=12),
+       st.floats(0.1, 64.0, allow_nan=False, allow_infinity=False))
+@settings(max_examples=40, deadline=None)
+def test_arbiter_work_conserving_and_capacity_bounded(policy, bits, gbps):
+    """Every policy (a) never grants past the channel's capacity, (b)
+    never grants a stream more than it demands, and (c) is
+    work-conserving: while unmet demand remains, the channel is fully
+    granted (up to burst-quantisation epsilon)."""
+    rep = _arbitrate(policy, bits, gbps=gbps)
+    cap = rep.capacity_bits_per_cycle
+    eps = 1e-9 * max(1.0, cap)
+    assert rep.total_granted_rate <= cap + eps
+    for s in rep.streams:
+        assert 0.0 <= s.granted_rate <= s.demand_rate + eps
+    if rep.total_demand_rate > cap + eps:        # oversubscribed
+        assert rep.total_granted_rate >= cap - eps
+        assert not rep.feasible
+    else:                                        # everyone satisfied
+        assert abs(rep.total_granted_rate - rep.total_demand_rate) <= eps
+        assert rep.feasible
+
+
+@given(st.lists(st.integers(1_000, 5_000_000), min_size=3, max_size=9),
+       st.floats(0.25, 4.0, allow_nan=False, allow_infinity=False),
+       st.floats(1.5, 8.0, allow_nan=False, allow_infinity=False))
+@settings(max_examples=40, deadline=None)
+def test_weighted_fair_grant_monotone_in_weight(bits, w0, factor):
+    """Raising one stream kind's weight (all else fixed) never shrinks
+    that kind's aggregate weighted-fair grant."""
+    lo = _arbitrate("weighted-fair", bits, weights=(w0, 1.0, 1.0),
+                    gbps=0.5)                    # scarce: weights matter
+    hi = _arbitrate("weighted-fair", bits, weights=(w0 * factor, 1.0, 1.0),
+                    gbps=0.5)
+    got_lo = sum(s.granted_rate for s in lo.streams
+                 if s.kind == "activation-evict")
+    got_hi = sum(s.granted_rate for s in hi.streams
+                 if s.kind == "activation-evict")
+    assert got_hi >= got_lo - 1e-9
+
+
+@given(st.lists(st.integers(1_000, 5_000_000), min_size=3, max_size=9))
+@settings(max_examples=30, deadline=None)
+def test_fixed_priority_starves_low_before_high(bits):
+    """Under fixed-priority on a scarce channel, a higher-priority kind
+    is never less satisfied than a lower-priority one (priority order:
+    weight-fetch > activation-restore > activation-evict)."""
+    rep = _arbitrate("fixed-priority", bits, gbps=0.25)
+    frac = {}
+    for kind in ("weight-fetch", "activation-restore", "activation-evict"):
+        ss = [s for s in rep.streams if s.kind == kind and s.demand_rate > 0]
+        if ss:
+            frac[kind] = (sum(s.granted_rate for s in ss)
+                          / sum(s.demand_rate for s in ss))
+    order = [k for k in ("weight-fetch", "activation-restore",
+                         "activation-evict") if k in frac]
+    for hi_k, lo_k in zip(order, order[1:]):
+        assert frac[hi_k] >= frac[lo_k] - 1e-9

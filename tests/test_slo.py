@@ -104,12 +104,31 @@ class TestSloEvaluator:
 
     def test_spill_bw_vs_device_budget(self):
         ev = SloEvaluator(bw_gbps=64.0)
-        # 5 GB in 1s = 40 Gbps = 0.625 of budget -> warn band
+        # 5 GB in 1s = 40 Gbps = 0.625 of budget -> warn band; without
+        # per-direction bytes the split checks see an even 20/20 Gbps
+        # against half-device (32 Gbps) budgets -> same 0.625 warn band
         ev.observe(frames=1, seconds=1.0, spill_bytes=5e9)
-        (check,) = ev.evaluate().checks
-        assert check.objective == "spill_bw"
-        assert check.measured == pytest.approx(40.0)
-        assert check.verdict == WARN
+        by_name = {c.objective: c for c in ev.evaluate().checks}
+        assert set(by_name) == {"spill_bw", "spill_bw_evict",
+                                "spill_bw_restore"}
+        assert by_name["spill_bw"].measured == pytest.approx(40.0)
+        assert by_name["spill_bw"].verdict == WARN
+        for name in ("spill_bw_evict", "spill_bw_restore"):
+            assert by_name[name].measured == pytest.approx(20.0)
+            assert by_name[name].verdict == WARN
+            assert "half-device" in by_name[name].detail
+
+    def test_spill_bw_split_uses_arbiter_budgets(self):
+        # granted budgets from the arbiter skew the per-direction verdicts
+        ev = SloEvaluator(bw_gbps=64.0,
+                          stream_budgets={"activation-evict": 60.0,
+                                          "activation-restore": 4.0})
+        ev.observe(frames=1, seconds=1.0, evict_bytes=2.5e9,
+                   restore_bytes=2.5e9)
+        by_name = {c.objective: c for c in ev.evaluate().checks}
+        assert by_name["spill_bw_evict"].verdict == PASS    # 20/60 Gbps
+        assert by_name["spill_bw_restore"].verdict == BREACH  # 20/4 Gbps
+        assert "arbiter-granted" in by_name["spill_bw_evict"].detail
 
     def test_rolling_window_evicts_old_samples(self):
         ev = SloEvaluator(SloConfig(window=4), roofline_fps=100.0)
