@@ -92,15 +92,16 @@ MODEL_NAMES = tuple(EXEC_MODELS)
 #                     for the pipeline to actually overlap (the Eq. 6 story).
 CUT_VARIANTS = (("output",), ("pool", "conv"))
 
-ROW_SCHEMA = ("executor", "model", "codecs", "n_stages", "microbatches",
-              "fps_executed", "fps_eq5", "fps_eq6", "rel_err",
+ROW_SCHEMA = ("executor", "model", "codecs", "kernel_mode", "n_stages",
+              "microbatches", "fps_executed", "fps_eq5", "fps_eq6", "rel_err",
               "offchip_kbits", "evicted", "fragged", "channel_policy",
               "fps_contended_eq6", "prefetch_deadline_misses")
 
 
 def _row(executor: str, model: str, codecs: tuple, plan, report,
          fps_executed: float, fps_eq5: float, fps_eq6: float,
-         rel_err: float, microbatches: int, mem=None) -> dict:
+         rel_err: float, microbatches: int, mem=None,
+         kernel_mode: str = "auto") -> dict:
     # contended-Eq.6 estimate: fps_eq6 (measured-latency units) scaled by
     # the memory model's analytic contention slowdown; a starved stream
     # (infinite contended cycles) predicts zero throughput
@@ -117,6 +118,7 @@ def _row(executor: str, model: str, codecs: tuple, plan, report,
         "executor": executor,
         "model": model,
         "codecs": "+".join(codecs),
+        "kernel_mode": kernel_mode,
         "n_stages": plan.n_stages,
         "microbatches": microbatches,
         "fps_executed": fps_executed,
@@ -141,7 +143,8 @@ def _derived(r: dict, schema: tuple, exclude: tuple) -> str:
 
 
 def _emit_row(r: dict, us_per_call: float) -> None:
-    emit(f"e2e/{r['model']}_{r['codecs']}_s{r['n_stages']}_{r['executor']}",
+    emit(f"e2e/{r['model']}_{r['codecs']}_s{r['n_stages']}_{r['executor']}"
+         f"_{r['kernel_mode']}",
          us_per_call, _derived(r, ROW_SCHEMA, ("model", "codecs")))
 
 
@@ -151,7 +154,8 @@ SEED = 0  # all bench inputs derive from PRNGKey(SEED); stamped in the JSON
 def run(smoke: bool = False, pipelined: bool = False,
         microbatches: int = 8, json_path: str | None = None,
         trace_path: str | None = None,
-        channel: str | None = "weighted-fair") -> list[dict]:
+        channel: str | None = "weighted-fair",
+        kernel_modes: tuple[str, ...] = ("auto",)) -> list[dict]:
     rows: list[dict] = []
     model_check = None
     np.random.seed(SEED)  # nothing below should draw host randomness, but
@@ -160,17 +164,20 @@ def run(smoke: bool = False, pipelined: bool = False,
     repeats = 3 if smoke else 5
     for name in names:
         # everything below goes through the one compile façade: the dense
-        # reference is codec-independent, so it is compiled once per model
+        # reference is codec/kernel-mode independent, so it is compiled
+        # once per model (reference dispatch is the numerical target)
         ref = smof_compile(CompileSpec(model=name, device=TINY_STREAM,
                                        mode="reference"))
         in_shape = ref.input_shape()
         x = jax.random.normal(jax.random.PRNGKey(SEED), in_shape,
                               jnp.float32)
         yr = ref.run(x).block_until_ready()
-        for codecs, cut_kinds in ((c, k) for c in (("none",), ("none", "bfp8"))
-                                  for k in CUT_VARIANTS):
+        for codecs, cut_kinds, km in (
+                (c, k, km) for c in (("none",), ("none", "bfp8"))
+                for k in CUT_VARIANTS for km in kernel_modes):
             staged = smof_compile(CompileSpec(
                 model=name, device=TINY_STREAM, strategy="dse", mode="staged",
+                kernel_mode=km,
                 dse=DSEConfig(batch=1, codecs=codecs, word_bits=16,
                               cut_kinds=cut_kinds)))
             plan, low = staged.plan, staged.executor
@@ -193,7 +200,8 @@ def run(smoke: bool = False, pipelined: bool = False,
             us_seq = timeit(lambda: low(x).block_until_ready(),
                             repeats=repeats, warmup=1)
             rows.append(_row("sequential", name, codecs, plan, low.report,
-                             1e6 / us_seq, fps_eq5, fps_eq6, rel, 1))
+                             1e6 / us_seq, fps_eq5, fps_eq6, rel, 1,
+                             kernel_mode=km))
             _emit_row(rows[-1], us_seq)
 
             if pipelined:
@@ -206,7 +214,7 @@ def run(smoke: bool = False, pipelined: bool = False,
                               / np.abs(np.asarray(yr)).max())
                 rows.append(_row("pipelined", name, codecs, plan, sx.report,
                                  1e6 / us_frame, fps_eq5, fps_eq6, rel_p, B,
-                                 mem=mem))
+                                 mem=mem, kernel_mode=km))
                 _emit_row(rows[-1], us_frame)
 
                 # --trace: narrate the first multi-stage pipelined config
@@ -312,6 +320,11 @@ def main(argv: list[str] | None = None) -> None:
                     choices=list(POLICIES) + ["none"],
                     help="off-chip channel arbitration policy for the "
                          "pipelined compile ('none' disables the model)")
+    ap.add_argument("--kernel-mode", default="auto",
+                    choices=("auto", "pallas", "reference", "both"),
+                    help="kernel dispatch for the measured compiles; "
+                         "'both' emits comparable reference and pallas "
+                         "rows per bench point (default auto)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.autotune:
@@ -322,7 +335,9 @@ def main(argv: list[str] | None = None) -> None:
     run(smoke=args.smoke, pipelined=args.pipelined,
         microbatches=args.microbatches, json_path=args.json,
         trace_path=args.trace if args.pipelined else None,
-        channel=None if args.channel == "none" else args.channel)
+        channel=None if args.channel == "none" else args.channel,
+        kernel_modes=(("reference", "pallas") if args.kernel_mode == "both"
+                      else (args.kernel_mode,)))
 
 
 if __name__ == "__main__":

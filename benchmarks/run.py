@@ -72,6 +72,11 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--check-baseline", default=None, metavar="PATH",
                     help="compare the e2e rows against a committed baseline "
                          "under per-metric tolerances; exit 1 on regression")
+    ap.add_argument("--kernel-mode", default="auto",
+                    choices=("auto", "pallas", "reference", "both"),
+                    help="kernel dispatch for the e2e compiles; 'both' "
+                         "emits comparable reference and pallas rows per "
+                         "bench point (default auto)")
     args = ap.parse_args(argv)
     smoke = args.smoke
     from . import (baseline, e2e_executor, fig6_ablation, fig7_compression,
@@ -79,9 +84,11 @@ def main(argv: list[str] | None = None) -> None:
                    table4_partitioning, table5_throughput)
     print("name,us_per_call,derived")
     table3_models.run()
-    e2e_rows = e2e_executor.run(smoke=smoke, pipelined=args.pipelined,
-                                microbatches=args.microbatches,
-                                json_path=args.e2e_json)
+    e2e_rows = e2e_executor.run(
+        smoke=smoke, pipelined=args.pipelined,
+        microbatches=args.microbatches, json_path=args.e2e_json,
+        kernel_modes=(("reference", "pallas") if args.kernel_mode == "both"
+                      else (args.kernel_mode,)))
     if args.baseline:
         p = baseline.write_baseline(e2e_rows, args.baseline,
                                     note="smoke" if smoke else "full")

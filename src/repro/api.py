@@ -478,6 +478,10 @@ class Compiled:
             "mode": self.mode,
             "strategy": self.strategy,   # decision origin: save/load-stable
             "kernel_mode": self.spec.resolved_kernel_mode(),
+            # the resolved Pallas interpret override (None = decide per
+            # backend via kernels.ops.resolve_interpret): saved so the
+            # artifact replays with the kernel path it was compiled with
+            "interpret": self.spec.interpret,
             "microbatches": B,
             "seed": self.spec.seed,
             "placement": self.spec.placement,
@@ -515,6 +519,7 @@ class Compiled:
             model=model, device=d["device"], strategy="manual-plan",
             mode=d["mode"], kernel_mode=d["kernel_mode"],
             microbatches=d["microbatches"], seed=d["seed"],
+            interpret=d.get("interpret"),
             placement=d.get("placement", "auto"), plan=plan,
             obs=ObsConfig.from_dict(d.get("obs", {})),
             channel=(ChannelConfig.from_dict(d["channel"])
@@ -548,6 +553,12 @@ def add_compile_args(ap, *, default_model: str | None = "unet_exec",
                     help=f"device registry name (default: {default_device})")
     ap.add_argument("--mode", default=default_mode, choices=list(modes),
                     help=f"execution mode (default: {default_mode})")
+    ap.add_argument("--kernel-mode", default="auto",
+                    choices=("auto", "pallas", "reference"),
+                    help="kernel dispatch: pallas = streaming_conv bodies "
+                         "with the fused BFP8 boundary codec (interpret "
+                         "mode off TPU), reference = pure-jnp oracles, "
+                         "auto = pallas on TPU only (default)")
     ap.add_argument("--channel", default=None, choices=list(POLICIES),
                     help="model the shared off-chip channel with this "
                          "arbitration policy (default: off)")
@@ -562,6 +573,8 @@ def spec_from_args(args, **overrides) -> CompileSpec:
     """Build a :class:`CompileSpec` from ``add_compile_args`` output."""
     kw: dict[str, Any] = {"model": args.model, "device": args.device,
                           "mode": args.mode}
+    if getattr(args, "kernel_mode", None) is not None:
+        kw["kernel_mode"] = args.kernel_mode
     policy = getattr(args, "channel", None)
     gbps = getattr(args, "channel_gbps", None)
     if policy is not None or gbps is not None:

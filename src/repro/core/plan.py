@@ -91,6 +91,13 @@ class ExecutionPlan:
     # stage-internal schedule, so ``stage_layers`` sorts by this list when
     # present (layers not in the list keep insertion order, appended last).
     topo_order: list[str] = dataclasses.field(default_factory=list)
+    # Pallas kernel tile sizes for the streaming_conv bodies (0 = kernel
+    # default): row block per grid step and, for the conv family, the
+    # out-channel block.  Results are tile-independent (bit-exact for any
+    # value — tests/test_properties.py), so these are pure performance
+    # knobs the autotuner's "tile" move explores for pallas candidates.
+    tile_bm: int = 0
+    tile_bc: int = 0
     # On-disk format version + provenance of the decisions.  ``provenance``
     # is free-form JSON the toolflow stamps at compile time (strategy,
     # device name, calibration s_per_cycle, autotune trajectory digest, ...)
@@ -161,6 +168,10 @@ class ExecutionPlan:
             errs.append(f"n_stages must be >= 1, got {self.n_stages}")
         if self.microbatch < 1:
             errs.append(f"microbatch must be >= 1, got {self.microbatch}")
+        if self.tile_bm < 0:
+            errs.append(f"tile_bm must be >= 0, got {self.tile_bm}")
+        if self.tile_bc < 0:
+            errs.append(f"tile_bc must be >= 0, got {self.tile_bc}")
         for name, lp in self.layers.items():
             if not 0 <= lp.stage < max(self.n_stages, 1):
                 errs.append(f"layer {name!r} on stage {lp.stage}, outside "

@@ -19,8 +19,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _quant_kernel(x_ref, man_ref, exp_ref, *, block: int):
-    x = x_ref[...].astype(jnp.float32)                  # (R, C)
+def bfp8_quant_values(x, *, block: int):
+    """Value-level quantisation math: (R, C) f32 -> (int8 mantissas (R, C),
+    int8 shared exponents (R, C//block)).
+
+    The single source of truth for the codec's numerics — the stripe
+    kernels below and the fused streaming_conv ingress/egress kernels all
+    call this, so a fused boundary codec cannot drift from the standalone
+    ``bfp8_quant``/``bfp8_dequant`` pair by construction."""
+    x = x.astype(jnp.float32)                           # (R, C)
     R, C = x.shape
     xb = x.reshape(R, C // block, block)
     amax = jnp.max(jnp.abs(xb), axis=-1)                # (R, C//block)
@@ -28,16 +35,26 @@ def _quant_kernel(x_ref, man_ref, exp_ref, *, block: int):
                     jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-38))), 0.0)
     scale = jnp.exp2(exp - 6.0)
     man = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
-    man_ref[...] = man.reshape(R, C).astype(jnp.int8)
-    exp_ref[...] = exp.astype(jnp.int8)
+    return man.reshape(R, C).astype(jnp.int8), exp.astype(jnp.int8)
+
+
+def bfp8_dequant_values(man, exp, *, block: int, dtype=jnp.float32):
+    """Value-level dequantisation math (inverse layout of
+    :func:`bfp8_quant_values`)."""
+    man = man.astype(jnp.float32)
+    R, C = man.shape
+    scale = jnp.exp2(exp.astype(jnp.float32) - 6.0)
+    out = man.reshape(R, C // block, block) * scale[..., None]
+    return out.reshape(R, C).astype(dtype)
+
+
+def _quant_kernel(x_ref, man_ref, exp_ref, *, block: int):
+    man_ref[...], exp_ref[...] = bfp8_quant_values(x_ref[...], block=block)
 
 
 def _dequant_kernel(man_ref, exp_ref, o_ref, *, block: int):
-    man = man_ref[...].astype(jnp.float32)
-    R, C = man.shape
-    scale = jnp.exp2(exp_ref[...].astype(jnp.float32) - 6.0)
-    out = man.reshape(R, C // block, block) * scale[..., None]
-    o_ref[...] = out.reshape(R, C).astype(o_ref.dtype)
+    o_ref[...] = bfp8_dequant_values(man_ref[...], exp_ref[...], block=block,
+                                     dtype=o_ref.dtype)
 
 
 def bfp8_quant(x: jax.Array, *, block: int = 32, rows: int = 256,

@@ -28,6 +28,35 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1x1 channel mixing (conv/matmul/deconv): y = x @ w."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32
+                   ).astype(x.dtype)
+
+
+def dwconv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise temporal conv, 'same' zero padding; w: (taps, c).  The
+    tap sum runs in Python ``sum`` order — the accumulation order the
+    streaming_conv kernels replicate for bit parity."""
+    taps = w.shape[0]
+    pad = taps // 2
+    xp = jnp.pad(x, ((pad, taps - 1 - pad), (0, 0)))
+    m = x.shape[0]
+    return sum(w[k][None, :] * xp[k:k + m] for k in range(taps))
+
+
+def pool_ref(x: jax.Array, m_out: int) -> jax.Array:
+    """Position-axis mean to m_out rows."""
+    m, c = x.shape
+    if m % m_out:
+        raise ValueError(f"pool needs m_out | m, got {m} -> {m_out}")
+    return x.reshape(m_out, m // m_out, c).mean(axis=1)
+
+
+def act_relu_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.relu(x)
+
+
 def bfp8_quant_ref(x: jax.Array, block: int = 32):
     """Block floating point: int8 mantissas + per-block exponent.
     x: (R, C) with C % block == 0.  Returns (mantissa i8, exponent i8)."""

@@ -1,0 +1,488 @@
+"""Streaming conv / dwconv / pool Pallas kernels with a fused BFP8
+boundary codec — the kernel-level analogue of the paper's line-buffer
+dataflow (§III) for the executable graphs' op vocabulary.
+
+Layout (docs/KERNELS.md has the full picture):
+
+* every kernel walks a **row-block grid**: one grid step owns a
+  ``(bm, C)`` stripe of positions, the software form of a line buffer
+  that consumes a sliding window of rows per cycle.  The channel-mixing
+  ops (``conv``/``matmul``/``deconv``) additionally tile the *output*
+  channel axis by ``bc`` with the **full K axis per grid step** — a
+  single ``jnp.dot`` per tile, no K-split accumulation, which is what
+  makes tiled results bit-exact against the untiled reference dot.
+* **fused ingress**: when the op's input edge arrives BFP8-evicted, the
+  kernel takes the spill payload (int8 mantissas + per-block int8 shared
+  exponents) and dequantises per block *inside* the ``pallas_call``
+  (``bfp8.bfp8_dequant_values``) instead of round-tripping through a
+  separate ``bfp8_dequant`` dispatch.
+* **fused egress**: when the op's output edge is BFP8-evicted, the same
+  ``pallas_call`` emits the f32 activation *and* its quantised spill
+  payload (multi-output ``out_specs``).  Quantisation blocks are
+  row-local ``(1, block)`` runs along the channel axis, so egress fusion
+  pins the full (block-padded) channel width per row-block — ``bm``
+  still tiles, ``bc`` does not apply — and the payload is bitwise the
+  one ``runtime.executor.bfp8_spill_encode`` would produce.
+
+Padding rules: rows pad with zeros to the row-block multiple (padded
+rows are computed and sliced away — zero rows cannot perturb real rows
+since nothing reduces over the position axis except ``pool``, whose
+grid is aligned to whole output rows).  Egress channel padding matches
+``bfp8_spill_encode`` exactly: pad to ``round_up(c, block)`` with
+zeros, quantise the padded stripe.
+
+Everything here is numerics-only: traffic accounting stays in
+``runtime.executor`` / the DSE.  ``interpret`` is resolved by the
+caller (``kernels.ops.resolve_interpret`` / the executors) — these
+wrappers take a concrete bool.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bfp8 import bfp8_dequant_values, bfp8_quant_values
+from .streamed_matmul import _round_up
+
+DEFAULT_BM = 128            # row-block default (positions per grid step)
+DEFAULT_BC = 128            # out-channel-block default (conv family only)
+
+# Module-level codec indirection: the fused kernels look these up at trace
+# time, so the differential fuzzer's fault injector can skew the *fused*
+# codec specifically (testing.oracle FAULTS) without touching the
+# standalone bfp8 stripe kernels.
+_quant_vals = bfp8_quant_values
+_dequant_vals = bfp8_dequant_values
+
+
+def _tile(n: int, b: int, default: int) -> int:
+    """Resolve a tile size: 0 means 'auto' (default, clamped to the axis)."""
+    b = b if b > 0 else default
+    return min(b, n) if n > 0 else b
+
+
+def _pad_rows(x: jax.Array, mp: int) -> jax.Array:
+    m = x.shape[0]
+    return x if m == mp else jnp.pad(x, ((0, mp - m), (0, 0)))
+
+
+def _pad_payload(payload, mp: int):
+    man, exp = payload
+    return _pad_rows(man, mp), _pad_rows(exp, mp)
+
+
+# =============================================================================
+# conv / matmul / deconv — 1x1 channel mixing, y = x @ w
+# =============================================================================
+
+def _conv_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def _conv_dec_kernel(man_ref, exp_ref, w_ref, o_ref, *, block, cin):
+    x = _dequant_vals(man_ref[...], exp_ref[...], block=block)[:, :cin]
+    o_ref[...] = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _conv_enc_kernel(x_ref, w_ref, o_ref, man_ref, exp_ref, *, block):
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y
+    man_ref[...], exp_ref[...] = _quant_vals(y, block=block)
+
+
+def _conv_dec_enc_kernel(man_ref, exp_ref, w_ref, o_ref, yman_ref, yexp_ref,
+                         *, block, cin):
+    x = _dequant_vals(man_ref[...], exp_ref[...], block=block)[:, :cin]
+    y = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y
+    yman_ref[...], yexp_ref[...] = _quant_vals(y, block=block)
+
+
+def conv2d(x, w, *, payload=None, encode=False, block: int = 32,
+           bm: int = 0, bc: int = 0, interpret: bool = False):
+    """Tiled streaming 1x1 conv: ``y = x @ w`` over a row-block grid.
+
+    x: (m, cin) f32 — or pass ``payload=(man, exp)`` (int8 spill buffers,
+    channel axis padded to the codec block) for a BFP8-evicted input edge;
+    the per-block dequant then runs inside the kernel.  ``encode=True``
+    additionally emits the output's BFP8 spill payload from the same
+    ``pallas_call`` and returns ``(y, (man, exp))``.
+
+    Bit-exact contract: ``y`` equals ``jnp.dot(x, w)`` (with ``x`` the
+    dequantised input where applicable) and the egress payload equals
+    ``bfp8_quant`` of the block-padded ``y`` — for every ``bm``/``bc``.
+    """
+    cin, n = w.shape
+    if payload is not None:
+        man, exp = payload
+        m, c_pad = man.shape
+        assert c_pad == _round_up(cin, block), (man.shape, cin, block)
+    else:
+        m = x.shape[0]
+        assert x.shape[1] == cin, (x.shape, w.shape)
+    bm = _tile(m, bm, DEFAULT_BM)
+    mp = _round_up(m, bm)
+
+    if not encode:
+        bc = _tile(n, bc, DEFAULT_BC)
+        npad = _round_up(n, bc)
+        wp = jnp.pad(w, ((0, 0), (0, npad - n)))
+        grid = (mp // bm, npad // bc)
+        if payload is None:
+            y = pl.pallas_call(
+                _conv_kernel, grid=grid,
+                in_specs=[pl.BlockSpec((bm, cin), lambda i, j: (i, 0)),
+                          pl.BlockSpec((cin, bc), lambda i, j: (0, j))],
+                out_specs=pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+                interpret=interpret,
+            )(_pad_rows(x, mp), wp)
+        else:
+            y = pl.pallas_call(
+                functools.partial(_conv_dec_kernel, block=block, cin=cin),
+                grid=grid,
+                in_specs=[pl.BlockSpec((bm, c_pad), lambda i, j: (i, 0)),
+                          pl.BlockSpec((bm, c_pad // block),
+                                       lambda i, j: (i, 0)),
+                          pl.BlockSpec((cin, bc), lambda i, j: (0, j))],
+                out_specs=pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+                interpret=interpret,
+            )(*_pad_payload(payload, mp), wp)
+        return y[:m, :n]
+
+    # egress fusion: full (block-padded) channel width per row-block so the
+    # row-local quant blocks line up with bfp8_spill_encode's padding
+    npad = _round_up(n, block)
+    wp = jnp.pad(w, ((0, 0), (0, npad - n)))
+    out_specs = [pl.BlockSpec((bm, npad), lambda i: (i, 0)),
+                 pl.BlockSpec((bm, npad), lambda i: (i, 0)),
+                 pl.BlockSpec((bm, npad // block), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+                 jax.ShapeDtypeStruct((mp, npad), jnp.int8),
+                 jax.ShapeDtypeStruct((mp, npad // block), jnp.int8)]
+    if payload is None:
+        y, man_o, exp_o = pl.pallas_call(
+            functools.partial(_conv_enc_kernel, block=block),
+            grid=(mp // bm,),
+            in_specs=[pl.BlockSpec((bm, cin), lambda i: (i, 0)),
+                      pl.BlockSpec((cin, npad), lambda i: (0, 0))],
+            out_specs=out_specs, out_shape=out_shape, interpret=interpret,
+        )(_pad_rows(x, mp), wp)
+    else:
+        y, man_o, exp_o = pl.pallas_call(
+            functools.partial(_conv_dec_enc_kernel, block=block, cin=cin),
+            grid=(mp // bm,),
+            in_specs=[pl.BlockSpec((bm, c_pad), lambda i: (i, 0)),
+                      pl.BlockSpec((bm, c_pad // block), lambda i: (i, 0)),
+                      pl.BlockSpec((cin, npad), lambda i: (0, 0))],
+            out_specs=out_specs, out_shape=out_shape, interpret=interpret,
+        )(*_pad_payload(payload, mp), wp)
+    return y[:m, :n], (man_o[:m], exp_o[:m])
+
+
+# =============================================================================
+# dwconv — depthwise temporal conv, 'same' padding, halo rows via pl.ds
+# =============================================================================
+
+def _dw_mix(xp, w, base, bm, taps):
+    """The reference tap sum on a row tile: ``sum`` in the same order as
+    ``runtime.executor._dwconv`` so the accumulation is bit-identical."""
+    return sum(w[k][None, :] *
+               jax.lax.dynamic_slice_in_dim(xp, base + k, bm, axis=0)
+               for k in range(taps))
+
+
+def _dwconv_kernel(xp_ref, w_ref, o_ref, *, bm, taps):
+    base = pl.program_id(0) * bm
+    w = w_ref[...]
+    # halo read: taps overlapping (bm, c) windows from the un-blocked,
+    # 'same'-padded input — BlockSpecs cannot overlap, pl.ds can
+    o_ref[...] = sum(w[k][None, :] * xp_ref[pl.ds(base + k, bm), :]
+                     for k in range(taps))
+
+
+def _dwconv_dec_kernel(man_ref, exp_ref, w_ref, o_ref, *, block, c, bm,
+                       taps, mp):
+    x = _dequant_vals(man_ref[...], exp_ref[...], block=block)[:, :c]
+    pad = taps // 2
+    xp = jnp.pad(x, ((pad, (taps - 1 - pad) + (mp - x.shape[0])), (0, 0)))
+    o_ref[...] = _dw_mix(xp, w_ref[...], pl.program_id(0) * bm, bm, taps)
+
+
+def _dwconv_enc_kernel(xp_ref, w_ref, o_ref, man_ref, exp_ref, *, block,
+                       bm, taps):
+    base = pl.program_id(0) * bm
+    w = w_ref[...]
+    y = sum(w[k][None, :] * xp_ref[pl.ds(base + k, bm), :]
+            for k in range(taps))
+    o_ref[...] = y
+    c = y.shape[1]
+    yq = jnp.pad(y, ((0, 0), (0, _round_up(c, block) - c)))
+    man_ref[...], exp_ref[...] = _quant_vals(yq, block=block)
+
+
+def _dwconv_dec_enc_kernel(man_ref, exp_ref, w_ref, o_ref, yman_ref,
+                           yexp_ref, *, block, c, bm, taps, mp):
+    x = _dequant_vals(man_ref[...], exp_ref[...], block=block)[:, :c]
+    pad = taps // 2
+    xp = jnp.pad(x, ((pad, (taps - 1 - pad) + (mp - x.shape[0])), (0, 0)))
+    y = _dw_mix(xp, w_ref[...], pl.program_id(0) * bm, bm, taps)
+    o_ref[...] = y
+    yq = jnp.pad(y, ((0, 0), (0, _round_up(c, block) - c)))
+    yman_ref[...], yexp_ref[...] = _quant_vals(yq, block=block)
+
+
+def dwconv(x, w, *, payload=None, encode=False, block: int = 32,
+           bm: int = 0, interpret: bool = False):
+    """Streaming depthwise temporal conv (w: (taps, c), 'same' padding).
+
+    Row-block grid with a ``taps``-row halo: the input stays un-blocked
+    (index map pins it) and each grid step reads its overlapping windows
+    with ``pl.ds`` — the line-buffer access pattern.  Fusion flags as in
+    :func:`conv2d`; ``payload`` carries ``c`` via ``w.shape[1]``.
+    """
+    taps, c = w.shape
+    if payload is not None:
+        man, exp = payload
+        m, c_pad = man.shape
+        assert c_pad == _round_up(c, block), (man.shape, c, block)
+    else:
+        m = x.shape[0]
+        assert x.shape[1] == c, (x.shape, w.shape)
+    bm = _tile(m, bm, DEFAULT_BM)
+    mp = _round_up(m, bm)
+    pad = taps // 2
+    cq = _round_up(c, block)
+    grid = (mp // bm,)
+
+    if payload is None:
+        xp = jnp.pad(x, ((pad, (taps - 1 - pad) + (mp - m)), (0, 0)))
+        in_specs = [pl.BlockSpec(xp.shape, lambda i: (0, 0)),
+                    pl.BlockSpec((taps, c), lambda i: (0, 0))]
+        if not encode:
+            y = pl.pallas_call(
+                functools.partial(_dwconv_kernel, bm=bm, taps=taps),
+                grid=grid, in_specs=in_specs,
+                out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((mp, c), jnp.float32),
+                interpret=interpret)(xp, w)
+            return y[:m]
+        y, man_o, exp_o = pl.pallas_call(
+            functools.partial(_dwconv_enc_kernel, block=block, bm=bm,
+                              taps=taps),
+            grid=grid, in_specs=in_specs,
+            out_specs=[pl.BlockSpec((bm, c), lambda i: (i, 0)),
+                       pl.BlockSpec((bm, cq), lambda i: (i, 0)),
+                       pl.BlockSpec((bm, cq // block), lambda i: (i, 0))],
+            out_shape=[jax.ShapeDtypeStruct((mp, c), jnp.float32),
+                       jax.ShapeDtypeStruct((mp, cq), jnp.int8),
+                       jax.ShapeDtypeStruct((mp, cq // block), jnp.int8)],
+            interpret=interpret)(xp, w)
+        return y[:m], (man_o[:m], exp_o[:m])
+
+    # ingress-fused: the payload stays un-blocked too (the decode is
+    # row-local but the halo needs neighbouring rows)
+    in_specs = [pl.BlockSpec((m, c_pad), lambda i: (0, 0)),
+                pl.BlockSpec((m, c_pad // block), lambda i: (0, 0)),
+                pl.BlockSpec((taps, c), lambda i: (0, 0))]
+    if not encode:
+        y = pl.pallas_call(
+            functools.partial(_dwconv_dec_kernel, block=block, c=c, bm=bm,
+                              taps=taps, mp=mp),
+            grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((mp, c), jnp.float32),
+            interpret=interpret)(man, exp, w)
+        return y[:m]
+    y, man_o, exp_o = pl.pallas_call(
+        functools.partial(_dwconv_dec_enc_kernel, block=block, c=c, bm=bm,
+                          taps=taps, mp=mp),
+        grid=grid, in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bm, c), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, cq), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, cq // block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((mp, c), jnp.float32),
+                   jax.ShapeDtypeStruct((mp, cq), jnp.int8),
+                   jax.ShapeDtypeStruct((mp, cq // block), jnp.int8)],
+        interpret=interpret)(man, exp, w)
+    return y[:m], (man_o[:m], exp_o[:m])
+
+
+# =============================================================================
+# pool — position-axis mean, grid aligned to whole output rows
+# =============================================================================
+
+def _pool_kernel(x_ref, o_ref, *, k):
+    x = x_ref[...]
+    o_ref[...] = x.reshape(o_ref.shape[0], k, x.shape[1]).mean(axis=1)
+
+
+def _pool_dec_kernel(man_ref, exp_ref, o_ref, *, block, c, k):
+    x = _dequant_vals(man_ref[...], exp_ref[...], block=block)[:, :c]
+    o_ref[...] = x.reshape(o_ref.shape[0], k, c).mean(axis=1)
+
+
+def _pool_enc_kernel(x_ref, o_ref, man_ref, exp_ref, *, block, k):
+    x = x_ref[...]
+    c = x.shape[1]
+    y = x.reshape(o_ref.shape[0], k, c).mean(axis=1)
+    o_ref[...] = y
+    yq = jnp.pad(y, ((0, 0), (0, _round_up(c, block) - c)))
+    man_ref[...], exp_ref[...] = _quant_vals(yq, block=block)
+
+
+def _pool_dec_enc_kernel(man_ref, exp_ref, o_ref, yman_ref, yexp_ref, *,
+                         block, c, k):
+    x = _dequant_vals(man_ref[...], exp_ref[...], block=block)[:, :c]
+    y = x.reshape(o_ref.shape[0], k, c).mean(axis=1)
+    o_ref[...] = y
+    yq = jnp.pad(y, ((0, 0), (0, _round_up(c, block) - c)))
+    yman_ref[...], yexp_ref[...] = _quant_vals(yq, block=block)
+
+
+def pool(x, m_out: int, *, c: int | None = None, payload=None, encode=False,
+         block: int = 32, bm: int = 0, interpret: bool = False):
+    """Streaming mean-pool (m -> m_out rows).  The row-block grid tiles
+    *output* rows by ``bm``, each step consuming the aligned ``bm * k``
+    input rows (k = m / m_out) — windows never straddle a grid step, so
+    tiling cannot reassociate any window's mean.  Fusion flags as in
+    :func:`conv2d`; ingress needs ``c`` (the payload is block-padded)."""
+    if payload is not None:
+        assert c is not None, "pool ingress fusion needs the channel count"
+        man, exp = payload
+        m, c_pad = man.shape
+        assert c_pad == _round_up(c, block), (man.shape, c, block)
+    else:
+        m, c = x.shape
+    if m % m_out:
+        raise ValueError(f"pool needs m_out | m, got {m} -> {m_out}")
+    k = m // m_out
+    bo = _tile(m_out, bm, DEFAULT_BM)
+    mop = _round_up(m_out, bo)
+    cq = _round_up(c, block)
+    grid = (mop // bo,)
+
+    if payload is None:
+        xp = _pad_rows(x, mop * k)
+        in_specs = [pl.BlockSpec((bo * k, c), lambda i: (i, 0))]
+        args = (xp,)
+        dec_kw = {}
+        kern, kern_enc = _pool_kernel, _pool_enc_kernel
+    else:
+        in_specs = [pl.BlockSpec((bo * k, c_pad), lambda i: (i, 0)),
+                    pl.BlockSpec((bo * k, c_pad // block),
+                                 lambda i: (i, 0))]
+        args = _pad_payload(payload, mop * k)
+        dec_kw = {"c": c}
+        kern, kern_enc = _pool_dec_kernel, _pool_dec_enc_kernel
+    if not encode:
+        extra = dict(block=block, **dec_kw) if dec_kw else {}
+        y = pl.pallas_call(
+            functools.partial(kern, k=k, **extra),
+            grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((bo, c), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((mop, c), jnp.float32),
+            interpret=interpret)(*args)
+        return y[:m_out]
+    y, man_o, exp_o = pl.pallas_call(
+        functools.partial(kern_enc, block=block, k=k, **dec_kw),
+        grid=grid, in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bo, c), lambda i: (i, 0)),
+                   pl.BlockSpec((bo, cq), lambda i: (i, 0)),
+                   pl.BlockSpec((bo, cq // block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((mop, c), jnp.float32),
+                   jax.ShapeDtypeStruct((mop, cq), jnp.int8),
+                   jax.ShapeDtypeStruct((mop, cq // block), jnp.int8)],
+        interpret=interpret)(*args)
+    return y[:m_out], (man_o[:m_out], exp_o[:m_out])
+
+
+# =============================================================================
+# act — relu, the cheapest op that still rides the fused codec
+# =============================================================================
+
+def _act_kernel(x_ref, o_ref):
+    o_ref[...] = jax.nn.relu(x_ref[...])
+
+
+def _act_dec_kernel(man_ref, exp_ref, o_ref, *, block, c):
+    x = _dequant_vals(man_ref[...], exp_ref[...], block=block)[:, :c]
+    o_ref[...] = jax.nn.relu(x)
+
+
+def _act_enc_kernel(x_ref, o_ref, man_ref, exp_ref, *, block):
+    y = jax.nn.relu(x_ref[...])
+    o_ref[...] = y
+    c = y.shape[1]
+    yq = jnp.pad(y, ((0, 0), (0, _round_up(c, block) - c)))
+    man_ref[...], exp_ref[...] = _quant_vals(yq, block=block)
+
+
+def _act_dec_enc_kernel(man_ref, exp_ref, o_ref, yman_ref, yexp_ref, *,
+                        block, c):
+    x = _dequant_vals(man_ref[...], exp_ref[...], block=block)[:, :c]
+    y = jax.nn.relu(x)
+    o_ref[...] = y
+    yq = jnp.pad(y, ((0, 0), (0, _round_up(c, block) - c)))
+    yman_ref[...], yexp_ref[...] = _quant_vals(yq, block=block)
+
+
+def act_relu(x, *, c: int | None = None, payload=None, encode=False,
+             block: int = 32, bm: int = 0, interpret: bool = False):
+    """Streaming relu over the row-block grid; fusion flags as in
+    :func:`conv2d` (ingress needs ``c``)."""
+    if payload is not None:
+        assert c is not None, "act ingress fusion needs the channel count"
+        man, exp = payload
+        m, c_pad = man.shape
+        assert c_pad == _round_up(c, block), (man.shape, c, block)
+    else:
+        m, c = x.shape
+    bm = _tile(m, bm, DEFAULT_BM)
+    mp = _round_up(m, bm)
+    cq = _round_up(c, block)
+    grid = (mp // bm,)
+
+    if payload is None:
+        in_specs = [pl.BlockSpec((bm, c), lambda i: (i, 0))]
+        args = (_pad_rows(x, mp),)
+        if not encode:
+            y = pl.pallas_call(
+                _act_kernel, grid=grid, in_specs=in_specs,
+                out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((mp, c), jnp.float32),
+                interpret=interpret)(*args)
+            return y[:m]
+        kern = functools.partial(_act_enc_kernel, block=block)
+    else:
+        in_specs = [pl.BlockSpec((bm, c_pad), lambda i: (i, 0)),
+                    pl.BlockSpec((bm, c_pad // block), lambda i: (i, 0))]
+        args = _pad_payload(payload, mp)
+        if not encode:
+            y = pl.pallas_call(
+                functools.partial(_act_dec_kernel, block=block, c=c),
+                grid=grid, in_specs=in_specs,
+                out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((mp, c), jnp.float32),
+                interpret=interpret)(*args)
+            return y[:m]
+        kern = functools.partial(_act_dec_enc_kernel, block=block, c=c)
+    y, man_o, exp_o = pl.pallas_call(
+        kern, grid=grid, in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bm, c), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, cq), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, cq // block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((mp, c), jnp.float32),
+                   jax.ShapeDtypeStruct((mp, cq), jnp.int8),
+                   jax.ShapeDtypeStruct((mp, cq // block), jnp.int8)],
+        interpret=interpret)(*args)
+    return y[:m], (man_o[:m], exp_o[:m])
+
+
+__all__ = ["conv2d", "dwconv", "pool", "act_relu", "DEFAULT_BM",
+           "DEFAULT_BC"]

@@ -50,14 +50,22 @@ from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan, plan_from_dse
 from repro.core.resources import Device
 from repro.memory import ChannelConfig, build_memory_model
 from repro.obs.trace import NULL_RECORDER
-from repro.runtime.executor import WEIGHT_KINDS, analyze_plan
+from repro.runtime.executor import (WEIGHT_KINDS, analyze_plan,
+                                    resolve_kernel_mode)
 from repro.runtime.streamer import (StreamingExecutor, eq5_sequential_time,
                                     eq6_pipeline_time,
                                     lower_plan_pipelined,
                                     measured_stage_latencies, stage_latencies,
                                     stage_weight_bits)
 
-MOVES = ("split", "merge", "evict", "unevict", "frag")
+MOVES = ("split", "merge", "evict", "unevict", "frag", "tile")
+
+# candidate Pallas tile sizes for the "tile" move (0 = kernel default).
+# Results are tile-independent (bit-exact — tests/test_properties.py), so
+# these are pure performance knobs; only proposed when the resolved kernel
+# mode actually dispatches to the streaming_conv Pallas bodies.
+TILE_BM_CHOICES = (0, 8, 16, 32, 64, 128)
+TILE_BC_CHOICES = (0, 32, 64, 128)
 
 
 @dataclasses.dataclass
@@ -242,9 +250,12 @@ class _Genome:
     bounds: list[int]                       # topo indices starting stages 1..
     evict: dict[tuple[str, str], str]       # edge -> codec
     frac: dict[str, float]                  # layer -> static weight fraction
+    tile_bm: int = 0                        # Pallas row block (0 = default)
+    tile_bc: int = 0                        # Pallas out-channel block
 
     def clone(self) -> "_Genome":
-        return _Genome(list(self.bounds), dict(self.evict), dict(self.frac))
+        return _Genome(list(self.bounds), dict(self.evict), dict(self.frac),
+                       self.tile_bm, self.tile_bc)
 
 
 def _genome_from_plan(plan: ExecutionPlan, topo: list[str]) -> _Genome:
@@ -259,7 +270,8 @@ def _genome_from_plan(plan: ExecutionPlan, topo: list[str]) -> _Genome:
     evict = {(s.src, s.dst): s.codec for s in plan.streams if s.evicted}
     frac = {n: lp.weight_static_fraction for n, lp in plan.layers.items()
             if lp.weight_static_fraction < 1.0}
-    return _Genome(bounds=bounds, evict=evict, frac=frac)
+    return _Genome(bounds=bounds, evict=evict, frac=frac,
+                   tile_bm=plan.tile_bm, tile_bc=plan.tile_bc)
 
 
 def _plan_from_genome(g: Graph, topo: list[str], genome: _Genome, *,
@@ -278,15 +290,20 @@ def _plan_from_genome(g: Graph, topo: list[str], genome: _Genome, *,
     return ExecutionPlan(model=model, device=device,
                          n_stages=len(bounds) + 1, layers=layers,
                          streams=streams, microbatch=microbatch,
-                         topo_order=topo)
+                         topo_order=topo, tile_bm=genome.tile_bm,
+                         tile_bc=genome.tile_bc)
 
 
 def _propose(genome: _Genome, g: Graph, topo: list[str],
              deep_edges: list[tuple[str, str]], weighty: list[str],
-             rng: random.Random, cfg: AutotuneConfig
-             ) -> tuple[_Genome, str] | None:
-    """One SA move on a clone of ``genome``; None when no move applies."""
-    moves = list(MOVES)
+             rng: random.Random, cfg: AutotuneConfig, *,
+             tile_moves: bool = False) -> tuple[_Genome, str] | None:
+    """One SA move on a clone of ``genome``; None when no move applies.
+
+    ``tile_moves`` gates the "tile" move on the resolved kernel mode: the
+    tile genes only reach the streaming_conv Pallas bodies, so proposing
+    them under reference dispatch would measure pure noise."""
+    moves = [m for m in MOVES if tile_moves or m != "tile"]
     rng.shuffle(moves)
     for move in moves:
         cand = genome.clone()
@@ -318,6 +335,14 @@ def _propose(genome: _Genome, g: Graph, topo: list[str],
                 else:
                     cand.frac[name] = new
                 return cand, move
+        elif move == "tile":
+            if rng.random() < 0.5:
+                options = [b for b in TILE_BM_CHOICES if b != cand.tile_bm]
+                cand.tile_bm = rng.choice(options)
+            else:
+                options = [b for b in TILE_BC_CHOICES if b != cand.tile_bc]
+                cand.tile_bc = rng.choice(options)
+            return cand, move
     return None
 
 
@@ -385,6 +410,8 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
                     key=lambda e: e.buffer_depth, reverse=True)
     deep_edges = [(e.src, e.dst) for e in ranked[:max(len(ranked) // 2, 1)]]
     weighty = [n for n in topo if g.vertex(n).kind in WEIGHT_KINDS]
+    # tile genes only matter when the resolved mode dispatches to Pallas
+    tile_moves = resolve_kernel_mode(cfg.kernel_mode, None)[0]
 
     in_shape = exec_input_shape(g)
     x = jax.random.normal(jax.random.PRNGKey(cfg.seed), in_shape, jnp.float32)
@@ -461,7 +488,8 @@ def autotune(g: Graph, dev: Device, cfg: AutotuneConfig | None = None, *,
 
     temp = cfg.init_temperature
     for i in range(1, cfg.n_candidates):
-        prop = _propose(genome, g, topo, deep_edges, weighty, rng, cfg)
+        prop = _propose(genome, g, topo, deep_edges, weighty, rng, cfg,
+                        tile_moves=tile_moves)
         if prop is None:
             break
         cand, move = prop

@@ -67,6 +67,7 @@ import jax.numpy as jnp
 from ..core.graph import Graph
 from ..core.plan import ExecutionPlan
 from ..kernels import ref as kref
+from ..kernels import streaming_conv as SC
 from ..kernels.bfp8 import bfp8_dequant, bfp8_quant
 from ..kernels.streamed_matmul import _round_up, streamed_matmul_padded
 
@@ -244,6 +245,13 @@ class PlanAnalysis:
     interpret: bool
     in_vertex: str
     in_shape: tuple[int, int]
+    #: evicted edges carrying a BFP8 spill — the payload-routed set the
+    #: pallas-mode executors encode once per producer / decode per consumer
+    bfp8_edges: set = dataclasses.field(default_factory=set)
+    #: plan-level Pallas tile sizes (0 = kernel default): row block and,
+    #: for the conv family, out-channel block (docs/KERNELS.md)
+    tile_bm: int = 0
+    tile_bc: int = 0
 
     @property
     def n_stages(self) -> int:
@@ -272,6 +280,7 @@ def analyze_plan(g: Graph, plan: ExecutionPlan | None, *,
 
     spills: list[SpillRecord] = []
     spill_fn: dict[tuple[str, str], Callable] = {}
+    bfp8_edges: set = set()
     for e in g.edges():
         u, w = e.src, e.dst
         s = stream_map.get((u, w))
@@ -286,6 +295,7 @@ def analyze_plan(g: Graph, plan: ExecutionPlan | None, *,
             off_bits, exact = _bfp8_offchip_bits(m, c), True
             fn = functools.partial(_bfp8_roundtrip, use_pallas=use_pallas,
                                    interpret=interpret)
+            bfp8_edges.add((u, w))
         elif evicted and codec not in LOSSLESS_CODECS:
             raise ValueError(f"unsupported eviction codec {codec!r} "
                              f"on edge {(u, w)}")
@@ -326,36 +336,61 @@ def analyze_plan(g: Graph, plan: ExecutionPlan | None, *,
         frac=frac, stage_of=stage_of, streamed_weight_bits=streamed_bits,
         static_weight_bits=static_bits, use_pallas=use_pallas,
         interpret=interpret, in_vertex=in_vertex,
-        in_shape=out_shape[in_vertex])
+        in_shape=out_shape[in_vertex], bfp8_edges=bfp8_edges,
+        tile_bm=(plan.tile_bm if plan is not None else 0),
+        tile_bc=(plan.tile_bc if plan is not None else 0))
 
 
 def apply_vertex(v, ins: list[jax.Array], params: dict, x: jax.Array | None,
                  analysis: PlanAnalysis) -> jax.Array:
     """Execute one vertex's semantics — the single source of truth for what
-    each op kind *does*, shared by both executors."""
+    each op kind *does*, shared by both executors.
+
+    Under the resolved ``kernel_mode="pallas"`` the conv/matmul/deconv,
+    dwconv, pool and act bodies dispatch to the ``kernels/streaming_conv``
+    Pallas kernels (bit-exact vs the reference bodies, every tile size);
+    fragmented weight layers keep the ``streamed_matmul`` fragmentation
+    kernel, whose codec stays unfused.  Data-movement and variadic kinds
+    (upsample/add/mul/concat/output) run their reference bodies in every
+    mode — the registry in ``kernels/ops.py`` records which is which.
+    """
+    an = analysis
     if v.kind == "input":
         assert x is not None, "input vertex fed without a graph input"
         return x
     if v.kind in WEIGHT_KINDS:
         h = ins[0]
-        f = analysis.frac.get(v.name, 1.0)
-        if f >= 1.0 or not analysis.use_pallas:
-            # un-fragmented (or oracle mode): plain dot — same math
-            return jnp.dot(h, params[v.name],
-                           preferred_element_type=jnp.float32).astype(h.dtype)
-        return streamed_matmul_padded(h, params[v.name], static_fraction=f,
-                                      interpret=analysis.interpret)
+        f = an.frac.get(v.name, 1.0)
+        if f < 1.0 and an.use_pallas:
+            return streamed_matmul_padded(h, params[v.name],
+                                          static_fraction=f,
+                                          interpret=an.interpret)
+        if an.use_pallas:
+            return SC.conv2d(h, params[v.name], bm=an.tile_bm,
+                             bc=an.tile_bc,
+                             interpret=an.interpret).astype(h.dtype)
+        # reference mode (or fragmented-without-pallas): plain dot
+        return jnp.dot(h, params[v.name],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
     if v.kind in TEMPORAL_KINDS:
         # the temporal split is not streamable through the matmul kernel;
         # a fragmented dwconv streams per the plan's traffic accounting but
         # executes the full (numerically identical) temporal mix.
+        if an.use_pallas:
+            return SC.dwconv(ins[0], params[v.name], bm=an.tile_bm,
+                             interpret=an.interpret)
         return _dwconv(ins[0], params[v.name])
     if v.kind == "act":
+        if an.use_pallas:
+            return SC.act_relu(ins[0], bm=an.tile_bm, interpret=an.interpret)
         return jax.nn.relu(ins[0])
     if v.kind == "pool":
-        return _pool(ins[0], analysis.out_shape[v.name][0])
+        if an.use_pallas:
+            return SC.pool(ins[0], an.out_shape[v.name][0], bm=an.tile_bm,
+                           interpret=an.interpret)
+        return _pool(ins[0], an.out_shape[v.name][0])
     if v.kind == "upsample":
-        return _upsample(ins[0], analysis.out_shape[v.name][0])
+        return _upsample(ins[0], an.out_shape[v.name][0])
     if v.kind == "add":
         return functools.reduce(jnp.add, ins)
     if v.kind == "mul":
@@ -365,6 +400,130 @@ def apply_vertex(v, ins: list[jax.Array], params: dict, x: jax.Array | None,
     if v.kind == "output":
         return jnp.concatenate([i.ravel() for i in ins])
     raise ValueError(f"op kind {v.kind!r} has no executable lowering")
+
+
+# =============================================================================
+# Kernel-level vertex lowering: Pallas bodies + fused BFP8 boundary codec
+# =============================================================================
+
+#: kinds whose Pallas body can fuse the BFP8 boundary codec (mirrors
+#: kernels.ops.fusable_kinds(); kept literal here so the executor does not
+#: import the jitted wrapper layer)
+FUSABLE_KINDS = ("conv", "deconv", "matmul", "dwconv", "pool", "act")
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexLowering:
+    """``_lower_vertex``'s decision record for one vertex under the
+    resolved kernel mode."""
+    fuse_in: tuple[str, str] | None  # bfp8 in-edge decoded inside the kernel
+    fuse_out: bool                   # kernel also emits the spill payload
+    needs_payload: bool              # some out-edge carries a bfp8 spill
+
+
+def _lower_vertex(g: Graph, name: str, an: PlanAnalysis) -> VertexLowering:
+    """Decide one vertex's kernel-level lowering: in pallas mode a fusable
+    kind with an un-fragmented weight fuses a *single* BFP8-evicted input
+    edge (ingress dequant inside the ``pallas_call``) and/or emits its
+    output's spill payload from the same call (egress quant).  Multi-input
+    consumers and fragmented weight layers fall back to the standalone
+    ``bfp8_spill_decode``/``bfp8_spill_encode`` dispatches."""
+    v = g.vertex(name)
+    needs_payload = an.use_pallas and any(
+        (name, s) in an.bfp8_edges for s in g.successors(name))
+    fusable = (an.use_pallas and v.kind in FUSABLE_KINDS
+               and not (v.kind in WEIGHT_KINDS
+                        and an.frac.get(name, 1.0) < 1.0))
+    fuse_in = None
+    if fusable:
+        in_edges = g.in_edges(name)
+        if len(in_edges) == 1 and (in_edges[0].src, name) in an.bfp8_edges:
+            fuse_in = (in_edges[0].src, name)
+    return VertexLowering(fuse_in=fuse_in,
+                          fuse_out=fusable and needs_payload,
+                          needs_payload=needs_payload)
+
+
+def apply_vertex_fused(v, ins, params, x, analysis: PlanAnalysis, *,
+                       payload_in=None, want_payload: bool = False):
+    """``apply_vertex`` with the fused BFP8 boundary codec.
+
+    ``payload_in`` is the (mantissa, exponent) spill payload of the
+    vertex's single input edge — dequantised per block *inside* the Pallas
+    kernel; ``want_payload=True`` asks the same ``pallas_call`` to also
+    quantise and emit the output's spill payload.  Returns
+    ``(y, payload | None)``.  Callers consult :func:`_lower_vertex` for
+    legality; with neither flag this is exactly ``apply_vertex``.
+    """
+    an = analysis
+    if payload_in is None and not want_payload:
+        return apply_vertex(v, ins, params, x, an), None
+    assert an.use_pallas and v.kind in FUSABLE_KINDS, (v.kind, an.use_pallas)
+    xin = ins[0] if payload_in is None else None
+    kw = dict(payload=payload_in, encode=want_payload, block=BFP8_BLOCK,
+              bm=an.tile_bm, interpret=an.interpret)
+    if v.kind in WEIGHT_KINDS:
+        out = SC.conv2d(xin, params[v.name], bc=an.tile_bc, **kw)
+    elif v.kind in TEMPORAL_KINDS:
+        out = SC.dwconv(xin, params[v.name], **kw)
+    elif v.kind == "pool":
+        out = SC.pool(xin, an.out_shape[v.name][0],
+                      c=an.out_shape[v.name][1], **kw)
+    else:                       # act
+        out = SC.act_relu(xin, c=an.out_shape[v.name][1], **kw)
+    return out if want_payload else (out, None)
+
+
+def run_vertices(g: Graph, an: PlanAnalysis, names: list[str], params: dict,
+                 x: jax.Array | None, external, hop):
+    """The one per-vertex execution loop both executors trace.
+
+    Runs ``names`` (a topo-ordered subset of the graph) with
+    payload-routed BFP8 eviction: in pallas mode the producer of a
+    BFP8-evicted edge encodes the spill once (fused into its kernel when
+    :func:`_lower_vertex` allows) and every consumer decodes it (fused
+    likewise, else via ``bfp8_spill_decode``); in reference mode every
+    spilled edge round-trips through ``spill_fn`` — numerically the same
+    composition either way, which is what the kernel conformance matrix
+    locks.  ``external(edge)`` resolves in-edges whose producer is outside
+    ``names`` (the pipelined streamer's decoded crossing reads); pass
+    ``None`` for a whole-graph run.  Returns ``(values, payloads)``.
+    """
+    internal = set(names)
+    values: dict[str, jax.Array] = {}
+    payloads: dict[str, tuple] = {}
+    for name in names:
+        v = g.vertex(name)
+        lv = _lower_vertex(g, name, an)
+        ins, payload_in = [], None
+        for e in g.in_edges(name):      # predecessor order = operand order
+            edge = (e.src, name)
+            if e.src not in internal:
+                ins.append(external(edge))
+                continue
+            if an.use_pallas and edge in an.bfp8_edges:
+                pay = jax.tree.map(hop, payloads[e.src])
+                if lv.fuse_in == edge:
+                    payload_in = pay
+                    ins.append(None)
+                else:
+                    ins.append(bfp8_spill_decode(
+                        pay, an.out_shape[e.src][1], use_pallas=True,
+                        interpret=an.interpret))
+            else:
+                val = values[e.src]
+                fn = an.spill_fn.get(edge)
+                if fn is not None:
+                    val = hop(fn(val))
+                ins.append(val)
+        y, pay = apply_vertex_fused(v, ins, params, x, an,
+                                    payload_in=payload_in,
+                                    want_payload=lv.fuse_out)
+        values[name] = y
+        if lv.needs_payload:
+            payloads[name] = pay if pay is not None else bfp8_spill_encode(
+                y, use_pallas=True, interpret=an.interpret)
+    return values, payloads
 
 
 # =============================================================================
@@ -469,9 +628,13 @@ def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
     (``repro.compile(CompileSpec(mode="staged"))``), which produces
     bit-identical executors and adds search, serving, and persistence.
 
-    kernel_mode: "pallas" dispatches fragmented matmuls and the BFP8 codec
-    to the Pallas kernels (interpret-mode off TPU), "reference" uses the
-    pure-jnp oracles, "auto" picks pallas on TPU and reference elsewhere.
+    kernel_mode: "pallas" dispatches conv/dwconv/pool/act to the
+    ``kernels/streaming_conv`` row-block kernels (with the BFP8 boundary
+    codec fused at evicted edges), fragmented matmuls to
+    ``streamed_matmul``, and the standalone codec to the bfp8 stripe
+    kernels (interpret-mode off TPU); "reference" uses the pure-jnp
+    oracles, "auto" picks pallas on TPU and reference elsewhere.  The two
+    modes are bit-exact against each other (tests/test_kernels.py).
     """
     use_pallas, interpret = resolve_kernel_mode(kernel_mode, interpret)
     hop = _make_offchip_hop()
@@ -486,17 +649,7 @@ def lower_plan(g: Graph, plan: ExecutionPlan | None = None, *,
             raise ValueError(
                 f"input shape {tuple(x.shape)} does not match the graph's "
                 f"input spec {an.in_shape} for {g.name!r}")
-        values: dict[str, jax.Array] = {}
-        for name in an.topo:
-            v = g.vertex(name)
-            ins = []
-            for e in g.in_edges(name):      # predecessor order = operand order
-                val = values[e.src]
-                fn = an.spill_fn.get((e.src, name))
-                if fn is not None:
-                    val = hop(fn(val))
-                ins.append(val)
-            values[name] = apply_vertex(v, ins, params, x, an)
+        values, _ = run_vertices(g, an, an.topo, params, x, None, hop)
         return values
 
     def forward(params: dict, x: jax.Array) -> jax.Array:

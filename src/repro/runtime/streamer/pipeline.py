@@ -44,8 +44,8 @@ from ...obs.stream import StreamTracer
 from ...obs.trace import NULL_RECORDER
 from ..executor import (BFP8_BLOCK, TEMPORAL_KINDS, PlanAnalysis, SpillReport,
                         _exec_spec, _make_offchip_hop, analyze_plan,
-                        apply_vertex, bfp8_spill_decode, bfp8_spill_encode,
-                        init_params, resolve_kernel_mode)
+                        bfp8_spill_decode, bfp8_spill_encode, init_params,
+                        resolve_kernel_mode, run_vertices)
 from . import queues as Q
 from . import schedule as SCH
 
@@ -229,25 +229,21 @@ def _make_stage_fns(g: Graph, an: PlanAnalysis, names: list[list[str]],
         mine = set(names[j])
 
         def fn(params, x, reads):
-            values: dict[str, jax.Array] = {}
-            for name in names[j]:
-                v = g.vertex(name)
-                ins = []
-                for e in g.in_edges(name):
-                    if e.src in mine:
-                        val = values[e.src]
-                        sfn = an.spill_fn.get((e.src, name))
-                        if sfn is not None:   # same-stage eviction round-trip
-                            val = hop(sfn(val))
-                    else:
-                        val = reads[(e.src, name)]
-                    ins.append(val)
-                values[name] = apply_vertex(v, ins, params, x, an)
+            # the same payload-routed vertex loop the sequential executor
+            # traces (fused BFP8 codec in pallas mode, spill_fn round-trips
+            # in reference mode); crossing reads arrive pre-decoded
+            values, payloads = run_vertices(
+                g, an, names[j], params, x, lambda edge: reads[edge], hop)
             produced = {}
             for e in crossing:
                 if produced_by[e] == j:
-                    payload = enc[e](values[e[0]])
-                    produced[e] = jax.tree.map(hop, payload)
+                    # a pallas-mode producer already emitted this edge's
+                    # spill payload (fused egress where _lower_vertex
+                    # allowed) — bitwise what enc[e] would compute
+                    pay = payloads.get(e[0]) if e in an.bfp8_edges else None
+                    if pay is None:
+                        pay = enc[e](values[e[0]])
+                    produced[e] = jax.tree.map(hop, pay)
                 else:
                     produced[e] = None       # filled with zeros by caller
             y = (values[out_vertex] if out_vertex in mine

@@ -59,6 +59,9 @@ class GenConfig:
     channel_policies: tuple[str, ...] = POLICIES
     channel_gbps: tuple[float, ...] = (0.5, 1.0, 8.0, 64.0)
     channel_weights: tuple[float, ...] = (0.5, 1.0, 2.0)
+    #: probability a case draws kernel_mode="pallas" (interpret on CPU),
+    #: arming the kernel_parity oracle against the reference dispatch
+    p_pallas: float = 0.5
 
 
 # -----------------------------------------------------------------------------
@@ -278,6 +281,9 @@ class FuzzCase:
     seed: int
     label: str = "case"
     channel: ChannelConfig | None = None
+    #: kernel dispatch for the case's compiles ("reference" | "pallas");
+    #: "pallas" additionally arms the kernel_parity oracle
+    kernel_mode: str = "reference"
 
     @property
     def input_shape(self) -> tuple[int, int]:
@@ -304,8 +310,12 @@ def random_case(seed: int, index: int,
             weight_fetch_weight=rng.choice(list(cfg.channel_weights)),
             evict_weight=rng.choice(list(cfg.channel_weights)),
             restore_weight=rng.choice(list(cfg.channel_weights)))
+    # kernel_mode draw after the channel draw, same reasoning: every
+    # earlier draw stays byte-identical to the pre-kernel-mode generator.
+    kernel_mode = "pallas" if rng.random() < cfg.p_pallas else "reference"
     return FuzzCase(graph=g, plan=plan, seed=seed * 1000 + index,
-                    label=f"{seed}-{index}", channel=channel)
+                    label=f"{seed}-{index}", channel=channel,
+                    kernel_mode=kernel_mode)
 
 
 def case_to_json_dict(case: FuzzCase) -> dict:
@@ -316,6 +326,7 @@ def case_to_json_dict(case: FuzzCase) -> dict:
         "label": case.label,
         "channel": (case.channel.to_dict()
                     if case.channel is not None else None),
+        "kernel_mode": case.kernel_mode,
     }
 
 
@@ -328,4 +339,6 @@ def case_from_json_dict(d: dict) -> FuzzCase:
         # pre-channel repro payloads have no "channel" key -> None
         channel=(ChannelConfig.from_dict(d["channel"])
                  if d.get("channel") else None),
+        # pre-kernel-mode payloads replay on the reference dispatch
+        kernel_mode=d.get("kernel_mode", "reference"),
     )

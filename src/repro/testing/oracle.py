@@ -229,6 +229,26 @@ def check_case(case: FuzzCase, *, resident_limit: int = 2,
                 f"(same plan, same codecs: must be bit-exact)")
     ran.append("staged_vs_pipelined")
 
+    # -- kernel_parity -------------------------------------------------------
+    # cases drawn with kernel_mode="pallas": the staged executor under the
+    # streaming_conv Pallas bodies (interpret mode on CPU, with the BFP8
+    # boundary codec fused at evicted edges) must be bit-exact against the
+    # staged reference dispatch per frame — the registry's two kernel paths
+    # are the same function (tests/test_kernels.py locks the matrix; this
+    # oracle locks it over the generated population).
+    if case.kernel_mode == "pallas":
+        c_pal = repro.compile(repro.CompileSpec(
+            mode="staged", plan=plan, **{**base, "kernel_mode": "pallas"}))
+        for b in range(B):
+            y = np.asarray(c_pal.run(xs[b]))
+            if not _eq(y, staged_ys[b]):
+                raise OracleViolation(
+                    "kernel_parity",
+                    f"staged pallas != staged reference on frame {b}: "
+                    + _first_divergence(c_staged.executor, c_pal.executor,
+                                        xs[b]))
+        ran.append("kernel_parity")
+
     # -- traced_parity + modelcheck ------------------------------------------
     ys_t, mc = c_pipe.executor.run_traced(xs, measure_stages=False)
     if not _eq(ys_t, pipe_ys):
@@ -345,7 +365,8 @@ def check_case(case: FuzzCase, *, resident_limit: int = 2,
 # fault injection (harness self-test)
 # -----------------------------------------------------------------------------
 
-FAULTS = ("skip-bfp8-decode", "undersize-queues", "oversubscribe-channel")
+FAULTS = ("skip-bfp8-decode", "undersize-queues", "oversubscribe-channel",
+          "skew-fused-quant")
 
 
 @contextlib.contextmanager
@@ -366,6 +387,12 @@ def inject_fault(name: str | None):
         ignoring the channel's capacity cap — on any case whose drawn
         channel is oversubscribed, total grants exceed ``bits_per_cycle``
         and ``modelcheck``/``channel_model`` must fire.
+    ``skew-fused-quant``
+        the fused egress quantiser of the streaming_conv Pallas kernels
+        writes a one-off block exponent (doubling every dequantised
+        value), while the standalone stripe codec stays correct — on any
+        pallas-mode case whose fused egress actually fires,
+        ``kernel_parity`` must catch the divergence.
 
     Used by the fuzz driver's ``--inject-fault`` flag and the harness
     self-tests: a conformance suite that cannot catch a planted bug is
@@ -394,6 +421,18 @@ def inject_fault(name: str | None):
             yield
         finally:
             _q.queue_specs = orig
+    elif name == "skew-fused-quant":
+        from ..kernels import streaming_conv as _sc
+        orig = _sc._quant_vals
+
+        def skewed(x, *, block):
+            man, exp = orig(x, block=block)
+            return man, exp + 1          # doubles every block's scale
+        _sc._quant_vals = skewed
+        try:
+            yield
+        finally:
+            _sc._quant_vals = orig
     elif name == "oversubscribe-channel":
         from ..memory import arbiter as _arb
         orig = _arb._grant

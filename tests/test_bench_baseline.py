@@ -83,7 +83,11 @@ class TestBaselineGate:
         committed = Path(__file__).resolve().parents[1] / "BENCH_smoke.json"
         d = json.loads(committed.read_text())
         assert d["kind"] == "smof-bench-baseline"
-        assert len(d["rows"]) == 8                  # 2 codecs x 2 cuts x 2 ex
+        # 2 codecs x 2 cuts x 2 kernel modes x 2 executors
+        assert len(d["rows"]) == 16
+        modes = set()
         for key, row in d["rows"].items():
             assert row_key(row) == key
             assert row["fps_executed"] > 0
+            modes.add(row["kernel_mode"])
+        assert modes == {"reference", "pallas"}

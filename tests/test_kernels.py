@@ -141,3 +141,321 @@ class TestBFP8Kernel:
         raw_bits = x.size * 16                  # stream words are bf16
         enc_bits = man.size * 8 + exp.size * 8
         assert enc_bits / raw_bits == pytest.approx((8 + 8 / 32) / 16)
+
+
+# =============================================================================
+# Streaming-conv kernel conformance matrix (ISSUE 10)
+#
+# Locks the contract ``runtime.executor.lower_plan`` relies on: for every
+# lowerable op kind, the Pallas body (interpret mode on CPU) is *bit-exact*
+# against the reference body on lossless edges, and the fused BFP8 boundary
+# codec (ingress dequant / egress quant inside the same ``pallas_call``)
+# produces bitwise the payload the unfused ``bfp8_spill_encode`` path
+# would — on odd, non-128-aligned shapes.
+#
+# dwconv caveat: XLA:CPU contracts the tap sum into FMAs when jitted, so
+# its reference composition must be *jitted* for bit-exactness (the
+# executors always jit; eager comparison would see ~1 ULP drift).
+# =============================================================================
+
+from repro.core.builders import _XB, EXEC_MODELS, exec_input_shape
+from repro.core.graph import Graph
+from repro.core.plan import ExecutionPlan, LayerPlan, StreamPlan
+from repro.kernels import streaming_conv as SC
+from repro.kernels.ops import (KERNEL_REGISTRY, fusable_kinds, kernel_for,
+                               lowerable_kinds, resolve_interpret)
+from repro.runtime.executor import (FUSABLE_KINDS, _lower_vertex,
+                                    analyze_plan, lower_plan)
+
+BLOCK = 32
+# odd / non-128-aligned (m, c): m is never a bm multiple, c is never a
+# codec-block multiple — every padding path in the kernels is live
+ODD_SHAPES = [(28, 24), (45, 40)]
+VARIANTS = ("plain", "ingress", "egress", "both")
+
+
+def _pad_c(a, block=BLOCK):
+    c = a.shape[1]
+    cp = ((c + block - 1) // block) * block
+    return jnp.pad(a, ((0, 0), (0, cp - c)))
+
+
+def _encode_ref(y):
+    """The unfused spill payload: ``bfp8_quant_ref`` of the block-padded
+    stripe — what ``bfp8_spill_encode`` produces in reference mode."""
+    return ref.bfp8_quant_ref(_pad_c(y), block=BLOCK)
+
+
+def _decode_ref(payload, c):
+    man, exp = payload
+    return ref.bfp8_dequant_ref(man, exp, block=BLOCK)[:, :c]
+
+
+def _kind_io(kind, m, c, key):
+    """(x, w, kernel_kwargs, reference_body) for one fusable kind."""
+    kx, kw_ = jax.random.split(jax.random.PRNGKey(key))
+    x = jax.random.normal(kx, (m, c), jnp.float32)
+    extra = {"c": c}
+    if kind == "conv":
+        cout = c + 16                       # still not a block multiple
+        w = jax.random.normal(kw_, (c, cout), jnp.float32) / np.sqrt(c)
+        return x, w, extra, lambda xe: ref.conv2d_ref(xe, w)
+    if kind == "dwconv":
+        w = jax.random.normal(kw_, (3, c), jnp.float32)
+        return x, w, extra, lambda xe: ref.dwconv_ref(xe, w)
+    if kind == "pool":
+        assert m % 2 == 0 or m % 3 == 0
+        k = 2 if m % 2 == 0 else 3
+        extra["m_out"] = m // k
+        return x, None, extra, lambda xe: ref.pool_ref(xe, m // k)
+    assert kind == "act"
+    return x, None, extra, ref.act_relu_ref
+
+
+def _call_kernel(kind, x, w, extra, *, payload=None, encode=False, bm=0,
+                 bc=0):
+    kw = dict(payload=payload, encode=encode, block=BLOCK, bm=bm,
+              interpret=True)
+    if kind == "conv":
+        return SC.conv2d(x, w, bc=bc, **kw)
+    if kind == "dwconv":
+        return SC.dwconv(x, w, **kw)
+    if kind == "pool":
+        return SC.pool(x, extra["m_out"], c=extra["c"], **kw)
+    return SC.act_relu(x, c=extra["c"], **kw)
+
+
+class TestKernelConformanceMatrix:
+    """Every fusable kind x fusion variant x odd shape: pallas-interpret
+    against the (jitted) reference composition, bit-exact."""
+
+    @pytest.mark.parametrize("m,c", ODD_SHAPES)
+    @pytest.mark.parametrize("variant", VARIANTS)
+    @pytest.mark.parametrize("kind", ("conv", "dwconv", "pool", "act"))
+    def test_pallas_matches_reference(self, kind, variant, m, c):
+        x, w, extra, body = _kind_io(kind, m, c, key=7)
+        ingress = variant in ("ingress", "both")
+        egress = variant in ("egress", "both")
+
+        payload = _encode_ref(x) if ingress else None
+        # reference composition: (decode ->) body (-> encode), jitted as
+        # one function exactly like the executors trace it
+        def composed(x, payload):
+            xe = _decode_ref(payload, c) if ingress else x
+            y = body(xe)
+            return (y, _encode_ref(y)) if egress else y
+        want = jax.jit(composed)(None if ingress else x, payload)
+
+        got = _call_kernel(kind, None if ingress else x, w, extra,
+                           payload=payload, encode=egress)
+        if egress:
+            (gy, (gman, gexp)), (wy, (wman, wexp)) = got, want
+            np.testing.assert_array_equal(np.asarray(gy), np.asarray(wy))
+            np.testing.assert_array_equal(np.asarray(gman),
+                                          np.asarray(wman))
+            np.testing.assert_array_equal(np.asarray(gexp),
+                                          np.asarray(wexp))
+        else:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("kind", ("conv", "dwconv", "pool", "act"))
+    def test_fused_codec_respects_bfp8_bound(self, kind):
+        """The fused egress payload decodes back within the shared-exponent
+        bound (|err| <= half the per-block scale) of the true output."""
+        m, c = 28, 24
+        x, w, extra, body = _kind_io(kind, m, c, key=11)
+        y, payload = _call_kernel(kind, x, w, extra, encode=True)
+        back = np.asarray(_decode_ref(payload, np.asarray(y).shape[1]))
+        yv = np.asarray(y)
+        exp = np.asarray(payload[1], np.float32)
+        scale = np.exp2(exp - 6.0)                        # 2^(exp-7) * 2
+        err = np.abs(_pad_c(jnp.asarray(yv)) - _pad_c(jnp.asarray(back)))
+        err = np.asarray(err).reshape(yv.shape[0], -1, BLOCK)
+        assert (err <= scale[..., None] * 0.5 + 1e-30).all()
+
+    @pytest.mark.parametrize("bm,bc", [(5, 7), (28, 24), (128, 128),
+                                       (13, 40)])
+    def test_tile_sizes_never_change_results(self, bm, bc):
+        """bm/bc are pure performance knobs: any tile size, same bits —
+        including sizes that do not divide the axes."""
+        m, c = 45, 40
+        for kind in ("conv", "dwconv", "pool", "act"):
+            x, w, extra, body = _kind_io(kind, m, c, key=3)
+            base = _call_kernel(kind, x, w, extra, bm=0, bc=0)
+            tiled = _call_kernel(kind, x, w, extra, bm=bm, bc=bc)
+            np.testing.assert_array_equal(np.asarray(base),
+                                          np.asarray(tiled))
+
+    def test_fused_equals_unfused_same_quant_blocks(self):
+        """decode->conv->encode fused into one pallas_call is bitwise the
+        three-dispatch pipeline (same quant blocks on both sides)."""
+        m, c = 28, 24
+        x, w, extra, body = _kind_io("conv", m, c, key=19)
+        payload = _encode_ref(x)
+        y_f, pay_f = _call_kernel("conv", None, w, extra, payload=payload,
+                                  encode=True)
+        xe = _decode_ref(payload, c)
+        y_u = _call_kernel("conv", xe, w, extra)
+        pay_u = _encode_ref(y_u)
+        np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+        np.testing.assert_array_equal(np.asarray(pay_f[0]),
+                                      np.asarray(pay_u[0]))
+        np.testing.assert_array_equal(np.asarray(pay_f[1]),
+                                      np.asarray(pay_u[1]))
+
+
+class TestKernelRegistry:
+    def test_every_lowerable_kind_registered(self):
+        assert set(lowerable_kinds()) >= {
+            "input", "conv", "matmul", "deconv", "dwconv", "pool", "act",
+            "upsample", "add", "mul", "concat", "output"}
+
+    def test_fusable_kinds_match_executor(self):
+        assert set(fusable_kinds()) == set(FUSABLE_KINDS)
+
+    def test_dispatch_rows(self):
+        body, is_pallas = kernel_for("conv", use_pallas=True)
+        assert body is SC.conv2d and is_pallas
+        body, is_pallas = kernel_for("conv", use_pallas=False)
+        assert body is ref.conv2d_ref and not is_pallas
+        # kinds with no Pallas body fall back to reference in pallas mode
+        body, is_pallas = kernel_for("concat", use_pallas=True)
+        assert body is KERNEL_REGISTRY["concat"].reference and not is_pallas
+
+    def test_resolve_interpret_explicit_wins(self):
+        assert resolve_interpret(True) is True
+        assert resolve_interpret(False) is False
+        # None falls back to interpret-on-CPU (tests run on CPU)
+        assert resolve_interpret(None) is True
+
+
+# -----------------------------------------------------------------------------
+# Graph-level conformance: lower_plan over every lowerable kind
+# -----------------------------------------------------------------------------
+
+def _all_kinds_graph():
+    """A 12-vertex graph exercising every lowerable op kind once, on odd
+    non-aligned shapes (m=28, c=24/40)."""
+    g = Graph("allkinds")
+    b = _XB(g)
+    inp = b.xsimple(None, "input", 24, 28)
+    c1 = b.xconv(inp, 24, 40, 28)
+    a1 = b.xsimple(c1, "act", 40, 28)
+    dw = b.xdwconv(a1, 40, 28)
+    po = b.xsimple(dw, "pool", 40, 28, m_out=14)
+    up = b.xsimple(po, "upsample", 40, 14, m_out=28)
+    ad = b.xsimple([a1, up], "add", 40, 28)
+    ml = b.xsimple([ad, dw], "mul", 40, 28)
+    mm = b.xconv(ml, 40, 24, 28, kind="matmul")
+    dc = b.xconv(mm, 24, 24, 28, kind="deconv")
+    cc = b.xsimple([dc, inp], "concat", 48, 28)
+    b.xsimple(cc, "output", 48, 28)
+    return g
+
+
+def _chain_graph():
+    """Linear chain whose every internal edge has a single-input consumer —
+    the topology where *ingress* fusion is legal on every hop."""
+    g = Graph("chain")
+    b = _XB(g)
+    inp = b.xsimple(None, "input", 24, 28)
+    c1 = b.xconv(inp, 24, 40, 28)
+    a1 = b.xsimple(c1, "act", 40, 28)
+    dw = b.xdwconv(a1, 40, 28)
+    po = b.xsimple(dw, "pool", 40, 28, m_out=14)
+    c2 = b.xconv(po, 40, 24, 14)
+    b.xsimple(c2, "output", 24, 14)
+    return g
+
+
+def _evict_all_plan(g, codec):
+    g.compute_buffer_depths()
+    return ExecutionPlan(
+        model=g.name, device="tiny", n_stages=1,
+        layers={v.name: LayerPlan(name=v.name) for v in g.vertices()},
+        streams=[StreamPlan(e.src, e.dst, evicted=True, codec=codec)
+                 for e in g.edges()],
+        topo_order=g.topo())
+
+
+class TestGraphKernelConformance:
+    """lower_plan end-to-end: reference vs pallas over {lossless,
+    BFP8-evicted} plans covering every lowerable kind."""
+
+    @pytest.mark.parametrize("codec", ["none", "bfp8"])
+    def test_all_kinds_bit_exact_across_modes(self, codec):
+        g = _all_kinds_graph()
+        plan = _evict_all_plan(g, codec)
+        x = jax.random.normal(jax.random.PRNGKey(0), (28, 24), jnp.float32)
+        yr = np.asarray(lower_plan(g, plan, kernel_mode="reference",
+                                   interpret=True)(x))
+        yp = np.asarray(lower_plan(g, plan, kernel_mode="pallas",
+                                   interpret=True)(x))
+        np.testing.assert_array_equal(yr, yp)
+
+    def test_bfp8_stays_near_lossless(self):
+        """The compounding BFP8 error across every evicted edge stays small
+        — and is non-zero, i.e. the codec really engaged."""
+        g = _all_kinds_graph()
+        x = jax.random.normal(jax.random.PRNGKey(0), (28, 24), jnp.float32)
+        y0 = np.asarray(lower_plan(g, _evict_all_plan(g, "none"),
+                                   kernel_mode="pallas", interpret=True)(x))
+        yq = np.asarray(lower_plan(g, _evict_all_plan(g, "bfp8"),
+                                   kernel_mode="pallas", interpret=True)(x))
+        rel = np.linalg.norm(yq - y0) / np.linalg.norm(y0)
+        assert 0.0 < rel < 0.2
+
+    def test_chain_exercises_ingress_and_egress_fusion(self):
+        """On the all-evicted chain, _lower_vertex fuses both directions
+        for every fusable hop — and the fused run stays bit-exact against
+        reference mode."""
+        g = _chain_graph()
+        plan = _evict_all_plan(g, "bfp8")
+        an = analyze_plan(g, plan, use_pallas=True, interpret=True)
+        fuse_in = [n for n in an.topo if _lower_vertex(g, n, an).fuse_in]
+        fuse_out = [n for n in an.topo if _lower_vertex(g, n, an).fuse_out]
+        assert len(fuse_in) >= 4 and len(fuse_out) >= 4
+        x = jax.random.normal(jax.random.PRNGKey(1), (28, 24), jnp.float32)
+        yr = np.asarray(lower_plan(g, plan, kernel_mode="reference",
+                                   interpret=True)(x))
+        yp = np.asarray(lower_plan(g, plan, kernel_mode="pallas",
+                                   interpret=True)(x))
+        np.testing.assert_array_equal(yr, yp)
+
+    def test_plan_tile_sizes_thread_through(self):
+        """ExecutionPlan.tile_bm/tile_bc reach the kernels and never change
+        the bits (the autotune 'tile' move's safety contract)."""
+        import dataclasses as dc
+        g = _chain_graph()
+        plan = _evict_all_plan(g, "bfp8")
+        x = jax.random.normal(jax.random.PRNGKey(2), (28, 24), jnp.float32)
+        y0 = np.asarray(lower_plan(g, plan, kernel_mode="pallas",
+                                   interpret=True)(x))
+        yt = np.asarray(lower_plan(g, dc.replace(plan, tile_bm=5,
+                                                 tile_bc=7),
+                                   kernel_mode="pallas", interpret=True)(x))
+        np.testing.assert_array_equal(y0, yt)
+
+    @pytest.mark.parametrize("model", sorted(EXEC_MODELS))
+    def test_exec_models_parity(self, model):
+        """The acceptance check: every executable model, BFP8-evicted deep
+        edges, pallas == reference bit-exactly."""
+        g = EXEC_MODELS[model]()
+        g.compute_buffer_depths()
+        plan = ExecutionPlan(
+            model=g.name, device="tiny", n_stages=1,
+            layers={v.name: LayerPlan(name=v.name) for v in g.vertices()},
+            streams=[StreamPlan(e.src, e.dst,
+                                evicted=e.buffer_depth > 2048.0,
+                                codec="bfp8" if e.buffer_depth > 2048.0
+                                else "none")
+                     for e in g.edges()],
+            topo_order=g.topo())
+        assert any(s.evicted for s in plan.streams), model
+        x = jax.random.normal(jax.random.PRNGKey(0), exec_input_shape(g),
+                              jnp.float32)
+        yr = np.asarray(lower_plan(g, plan, kernel_mode="reference",
+                                   interpret=True)(x))
+        yp = np.asarray(lower_plan(g, plan, kernel_mode="pallas",
+                                   interpret=True)(x))
+        np.testing.assert_array_equal(yr, yp)

@@ -554,3 +554,89 @@ def test_fixed_priority_starves_low_before_high(bits):
                          "activation-evict") if k in frac]
     for hi_k, lo_k in zip(order, order[1:]):
         assert frac[hi_k] >= frac[lo_k] - 1e-9
+
+
+# =============================================================================
+# Streaming-conv fused-codec properties (ISSUE 10) — the fused BFP8
+# boundary codec is *defined* to be the unfused three-op pipeline, and
+# tile sizes are pure performance knobs.  Hypothesis searches the shape /
+# tile / seed space for any counterexample.
+# =============================================================================
+
+def _sc_case(m, c, cout, seed):
+    import jax
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, c), jnp.float32)
+    w = jax.random.normal(kw, (c, cout), jnp.float32) / np.sqrt(c)
+    return x, w
+
+
+def _sc_encode_ref(y, block=32):
+    import jax.numpy as jnp
+    from repro.kernels import ref as kref
+    c = y.shape[1]
+    cp = ((c + block - 1) // block) * block
+    return kref.bfp8_quant_ref(jnp.pad(y, ((0, 0), (0, cp - c))),
+                               block=block)
+
+
+@given(st.integers(1, 70), st.integers(1, 70), st.integers(1, 48),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_fused_conv_codec_equals_unfused_pipeline(m, c, cout, seed):
+    """decode->conv->encode fused inside one pallas_call is *bitwise* the
+    three-dispatch pipeline, for ANY shape: same activation, same quant
+    blocks, same payload bytes."""
+    import jax
+    from repro.kernels import ref as kref
+    from repro.kernels import streaming_conv as SC
+
+    x, w = _sc_case(m, c, cout, seed)
+    payload = _sc_encode_ref(x)
+    y_f, pay_f = SC.conv2d(None, w, payload=payload, encode=True,
+                           interpret=True)
+
+    def unfused(payload):
+        xe = kref.bfp8_dequant_ref(*payload, block=32)[:, :c]
+        y = kref.conv2d_ref(xe, w)
+        return y, _sc_encode_ref(y)
+    y_u, pay_u = jax.jit(unfused)(payload)
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+    np.testing.assert_array_equal(np.asarray(pay_f[0]), np.asarray(pay_u[0]))
+    np.testing.assert_array_equal(np.asarray(pay_f[1]), np.asarray(pay_u[1]))
+
+
+@given(st.integers(1, 70), st.integers(1, 70), st.integers(1, 48),
+       st.integers(1, 160), st.integers(1, 160),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_conv_tile_size_independence(m, c, cout, bm, bc, seed):
+    """Any (bm, bc) draw — dividing the axes or not, bigger than them or
+    not — produces bit-identical results to the default tiling."""
+    from repro.kernels import streaming_conv as SC
+
+    x, w = _sc_case(m, c, cout, seed)
+    base = SC.conv2d(x, w, interpret=True)
+    tiled = SC.conv2d(x, w, bm=bm, bc=bc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(tiled))
+
+
+@given(st.integers(1, 60), st.integers(1, 60), st.integers(1, 128),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_dwconv_tile_size_independence(m, c, bm, seed):
+    """The halo-read dwconv grid: any row-block size, same bits (tap sums
+    are evaluated per output row — tiling cannot reassociate them)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import streaming_conv as SC
+
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, c), jnp.float32)
+    w = jax.random.normal(kw, (3, c), jnp.float32)
+    base = SC.dwconv(x, w, interpret=True)
+    tiled = SC.dwconv(x, w, bm=bm, interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(tiled))
